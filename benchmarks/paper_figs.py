@@ -1,0 +1,158 @@
+"""Reproduce the paper's Figure 9 (a-e) and Table 1b with the simulator.
+
+Each function regenerates one figure's numbers and prints them next to
+the paper's reported values. The returned dicts feed EXPERIMENTS.md
+§Paper-validation.
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict
+
+import numpy as np
+
+from repro.sim import run
+from repro.sim.workloads import ORDER, TABLE_1B
+
+N_OPS = int(os.environ.get("REPRO_SIM_OPS", "12000"))
+CATS = {"compute": ["rsum", "stencil", "sort"],
+        "load": ["gemm", "vadd", "saxpy", "conv3", "path"],
+        "store": ["cfd", "gauss", "bfs"],
+        "real": ["gnn", "mri"]}
+
+_cache: Dict = {}
+
+
+def _run(cfg, w, m):
+    key = (cfg, w, m)
+    if key not in _cache:
+        _cache[key] = run(cfg, w, m, n_ops=N_OPS)
+    return _cache[key]
+
+
+def fig9a() -> Dict:
+    """DRAM expander: UVM / CXL vs GPU-DRAM, normalized exec time."""
+    rows = {}
+    for w in ORDER:
+        base = _run("gpu-dram", w, "dram").exec_ns
+        rows[w] = {"uvm": _run("uvm", w, "dram").exec_ns / base,
+                   "cxl": _run("cxl", w, "dram").exec_ns / base}
+    uvm_mean = float(np.mean([r["uvm"] for r in rows.values()]))
+    cxl_mean = float(np.mean([r["cxl"] for r in rows.values()]))
+    out = {"rows": rows, "uvm_mean": uvm_mean,
+           "uvm_over_cxl": uvm_mean / cxl_mean,
+           "paper": {"uvm_mean": 52.7, "uvm_over_cxl": 44.2,
+                     "cxl_gap_pct": {"compute": 2.3, "load": 19.7,
+                                     "store": 6.8}},
+           "cxl_gap_pct": {c: 100 * (np.mean([rows[w]["cxl"]
+                                              for w in names]) - 1)
+                           for c, names in CATS.items() if c != "real"}}
+    print("[fig9a] UVM mean %.1fx (paper 52.7) | UVM/CXL %.1fx (44.2)"
+          % (out["uvm_mean"], out["uvm_over_cxl"]))
+    for c, v in out["cxl_gap_pct"].items():
+        print("        CXL-vs-ideal %s: %+.1f%% (paper +%.1f%%)"
+              % (c, v, out["paper"]["cxl_gap_pct"][c]))
+    return out
+
+
+def fig9b() -> Dict:
+    """SSD (Z-NAND) expander: CXL / CXL-SR / CXL-DS."""
+    rows = {}
+    for w in ORDER:
+        c = _run("cxl", w, "znand").exec_ns
+        s = _run("cxl-sr", w, "znand").exec_ns
+        d = _run("cxl-ds", w, "znand").exec_ns
+        rows[w] = {"sr_gain": c / s, "ds_over_sr": s / d}
+    sr_mean = float(np.mean([r["sr_gain"] for r in rows.values()]))
+    ds = {c: 100 * (np.mean([rows[w]["ds_over_sr"] for w in names]) - 1)
+          for c, names in CATS.items() if c != "real"}
+    out = {"rows": rows, "sr_mean": sr_mean, "ds_over_sr_pct": ds,
+           "paper": {"sr_mean": 7.4,
+                     "ds_over_sr_pct": {"compute": 20.9, "load": 8.7,
+                                        "store": 62.8}}}
+    print("[fig9b] SR-over-CXL mean %.2fx (paper 7.4x)" % sr_mean)
+    for c, v in ds.items():
+        print("        DS-over-SR %s: %+.1f%% (paper +%.1f%%)"
+              % (c, v, out["paper"]["ds_over_sr_pct"][c]))
+    return out
+
+
+def fig9c() -> Dict:
+    """Backend-media sweep: SR/DS gains on Optane / Z-NAND / NAND."""
+    out = {"paper": {"sr_gain_by_media": {"optane": 7.1, "znand": 8.8,
+                                          "nand": 10.1},
+                     "bfs_ds_up_to": 4.0}}
+    for med in ("optane", "znand", "nand"):
+        gains = {}
+        for w in ("vadd", "path", "bfs"):
+            c = _run("cxl", w, med).exec_ns
+            gains[w] = {"sr": c / _run("cxl-sr", w, med).exec_ns,
+                        "ds": c / _run("cxl-ds", w, med).exec_ns}
+        out[med] = gains
+        print("[fig9c] %-6s SR gains vadd/path/bfs: %.1f/%.1f/%.1fx  "
+              "DS: %.1f/%.1f/%.1fx" % (
+                  med, gains["vadd"]["sr"], gains["path"]["sr"],
+                  gains["bfs"]["sr"], gains["vadd"]["ds"],
+                  gains["path"]["ds"], gains["bfs"]["ds"]))
+    return out
+
+
+def fig9d() -> Dict:
+    """SR ablation ladder: CXL -> NAIVE -> DYN -> SR hit rates (Z-NAND)."""
+    paper = {"Seq": (47.4, 88.4, 99.0, 99.0),
+             "Around": (31.2, 56.0, 57.4, 75.8),
+             "Rand": (10.0, 32.1, 34.0, 34.0)}
+    reps = {"Seq": "vadd", "Around": "sort", "Rand": "path"}
+    out = {"paper": paper}
+    for pat, w in reps.items():
+        hits = tuple(100 * _run(c, w, "znand").ep_hit_rate
+                     for c in ("cxl", "cxl-naive", "cxl-dyn", "cxl-sr"))
+        speeds = tuple(_run("cxl", w, "znand").exec_ns
+                       / _run(c, w, "znand").exec_ns
+                       for c in ("cxl-naive", "cxl-dyn", "cxl-sr"))
+        out[pat] = {"hits": hits, "speedups": speeds}
+        print("[fig9d] %-6s hits %s (paper %s)  speedups "
+              "naive/dyn/sr %.2f/%.2f/%.2fx"
+              % (pat, "/".join(f"{h:.0f}" for h in hits),
+                 "/".join(f"{h:.0f}" for h in paper[pat]), *speeds))
+    return out
+
+
+def fig9e() -> Dict:
+    """DS time series under GC: load/store latency, CXL-SR vs CXL-DS."""
+    out = {}
+    for cfg in ("cxl-sr", "cxl-ds"):
+        r = run(cfg, "bfs", "znand", n_ops=N_OPS, record_samples=True)
+        lat = np.array([(t, l, k) for t, l, k in r.samples])
+        loads = lat[lat[:, 2] == 1][:, 1]
+        stores = lat[lat[:, 2] == 2][:, 1]
+        out[cfg] = {
+            "p50_load_us": float(np.percentile(loads, 50)) / 1e3,
+            "p99_load_us": float(np.percentile(loads, 99)) / 1e3,
+            "p50_store_us": float(np.percentile(stores, 50)) / 1e3,
+            "p99_store_us": float(np.percentile(stores, 99)) / 1e3,
+            "exec_ms": r.exec_ns / 1e6}
+        print("[fig9e] %-6s p50/p99 load %.1f/%.1f us  store %.1f/%.1f us"
+              % (cfg, out[cfg]["p50_load_us"], out[cfg]["p99_load_us"],
+                 out[cfg]["p50_store_us"], out[cfg]["p99_store_us"]))
+    # DS must collapse the store tail
+    assert out["cxl-ds"]["p99_store_us"] <= out["cxl-sr"]["p99_store_us"]
+    return out
+
+
+def table1b() -> Dict:
+    """Workload characterization: generated traces vs Table 1b."""
+    out = {}
+    from repro.sim import workloads as wl
+    for name in ORDER:
+        tr = wl.generate(name, 30_000)
+        kinds = tr["kind"]
+        comp = float((kinds == 0).mean())
+        load = float((kinds == 1).sum()) / max(int((kinds > 0).sum()), 1)
+        spec = TABLE_1B[name]
+        out[name] = {"compute": comp, "load": load,
+                     "paper": (spec.compute_ratio, spec.load_ratio)}
+    print("[table1b] max |compute_ratio err| = %.3f, |load_ratio err| = %.3f"
+          % (max(abs(v["compute"] - v["paper"][0]) for v in out.values()),
+             max(abs(v["load"] - v["paper"][1]) for v in out.values())))
+    return out

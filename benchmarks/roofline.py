@@ -1,0 +1,118 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+For each (arch x shape) cell on the single-pod mesh:
+  compute term    = corrected_FLOPs_per_device / peak_FLOP/s
+  memory term     = corrected_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / ICI_bw
+plus MODEL_FLOPS = (6 or 2) * N_active * tokens and the useful-compute
+ratio. The dominant term is the bottleneck the perf loop iterates on.
+
+Artifacts come from ``python -m repro.launch.dryrun --cost``; variants
+written with ``--tag`` land in the same directory and can be compared
+with ``--tag``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.configs.base import HBM_PER_CHIP, HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "sp", tag: Optional[str] = None) -> List[Dict]:
+    cells = []
+    for f in sorted(ART.glob(f"*__{mesh}{'__' + tag if tag else ''}.json")):
+        d = json.loads(f.read_text())
+        if tag is None and len(f.stem.split("__")) != 3:
+            continue
+        cells.append(d)
+    return cells
+
+
+def terms(cell: Dict) -> Optional[Dict]:
+    """The three roofline terms (seconds/step/device) for one cell."""
+    if cell.get("status") != "ok":
+        return None
+    cost = cell.get("corrected") or cell.get("module")
+    coll = cost["collective_bytes"]
+    coll_b = sum(v for k, v in coll.items() if k != "count")
+    t_comp = cost["flops"] / PEAK_FLOPS_BF16
+    t_mem = cost["bytes_accessed"] / HBM_BW
+    t_coll = coll_b / ICI_BW
+    dominant = max((("compute", t_comp), ("memory", t_mem),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    n_dev = cell["n_devices"]
+    model_flops = cell.get("model_flops") or 0.0
+    hlo_total = cost["flops"] * n_dev
+    bound = max(t_comp, t_mem, t_coll)
+    # roofline fraction: useful model FLOP/s achieved at the bound vs peak
+    frac = (model_flops / n_dev / PEAK_FLOPS_BF16) / bound if bound else 0.0
+    mem = cell.get("memory_analysis") or {}
+    fits = None
+    if mem.get("temp_size_in_bytes") is not None:
+        resident = (mem.get("argument_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0))
+        fits = resident <= HBM_PER_CHIP
+    return {"arch": cell["arch"], "shape": cell["shape"],
+            "kind": cell.get("kind"),
+            "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+            "dominant": dominant, "bound_s": bound,
+            "roofline_frac": frac,
+            "useful_ratio": model_flops / hlo_total if hlo_total else 0.0,
+            "model_flops": model_flops, "fits_hbm": fits,
+            "corrected": bool(cell.get("corrected"))}
+
+
+def table(mesh: str = "sp", tag: Optional[str] = None) -> List[Dict]:
+    rows = [t for c in load_cells(mesh, tag) if (t := terms(c))]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def print_table(rows: List[Dict]) -> None:
+    hdr = (f"{'arch':24s} {'shape':11s} {'comp_ms':>8s} {'mem_ms':>8s} "
+           f"{'coll_ms':>8s} {'dominant':>10s} {'roofl%':>7s} "
+           f"{'useful':>7s} {'fits':>5s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:11s} "
+              f"{r['compute_s']*1e3:8.2f} {r['memory_s']*1e3:8.2f} "
+              f"{r['collective_s']*1e3:8.2f} {r['dominant']:>10s} "
+              f"{100*r['roofline_frac']:6.1f}% "
+              f"{r['useful_ratio']:7.3f} "
+              f"{str(r['fits_hbm'])[:5]:>5s}")
+
+
+def pick_hillclimb_cells(rows: List[Dict]) -> Dict[str, Dict]:
+    """worst roofline fraction, most collective-bound, most representative
+    (the MoE train cell — the paper's pooled-expansion showcase)."""
+    trainable = [r for r in rows if r["kind"] == "train"]
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    coll = max(rows, key=lambda r: (r["collective_s"]
+                                    / max(r["bound_s"], 1e-12)))
+    rep = next((r for r in trainable
+                if r["arch"] == "qwen3-moe-235b-a22b"), trainable[0]
+               if trainable else rows[0])
+    return {"worst_fraction": worst, "most_collective": coll,
+            "representative": rep}
+
+
+def main() -> None:
+    rows = table()
+    print_table(rows)
+    picks = pick_hillclimb_cells(rows)
+    print("\nhillclimb cells:")
+    for why, r in picks.items():
+        print(f"  {why:16s}: {r['arch']} x {r['shape']} "
+              f"(dominant={r['dominant']}, roofline={r['roofline_frac']:.1%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark aggregator: one section per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig9a roofline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+SECTIONS = ["table1b", "fig9a", "fig9b", "fig9c", "fig9d", "fig9e",
+            "roofline", "train_bench"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    todo = args.only or SECTIONS
+    results = {}
+    art = Path(__file__).resolve().parents[1] / "artifacts"
+    art.mkdir(exist_ok=True)
+
+    from benchmarks import paper_figs
+    for name in ("table1b", "fig9a", "fig9b", "fig9c", "fig9d", "fig9e"):
+        if name not in todo:
+            continue
+        t0 = time.time()
+        print(f"===== {name} " + "=" * 50)
+        results[name] = getattr(paper_figs, name)()
+        print(f"      ({time.time()-t0:.1f}s)")
+
+    if "roofline" in todo:
+        print("===== roofline " + "=" * 47)
+        from benchmarks import roofline
+        rows = roofline.table()
+        roofline.print_table(rows)
+        if rows:
+            picks = roofline.pick_hillclimb_cells(rows)
+            print("hillclimb cells:")
+            for why, r in picks.items():
+                print(f"  {why:16s}: {r['arch']} x {r['shape']} "
+                      f"(dominant={r['dominant']}, "
+                      f"roofline={r['roofline_frac']:.1%})")
+            results["roofline"] = rows
+
+    if "train_bench" in todo:
+        print("===== train_bench " + "=" * 44)
+        from benchmarks import train_step_bench
+        tb = train_step_bench.bench()
+        results["train_bench"] = {str(k): v for k, v in tb.items()}
+
+    (art / "bench_results.json").write_text(
+        json.dumps(results, indent=1, default=str))
+    print(f"\n[benchmarks] wrote {art/'bench_results.json'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,59 @@
+"""Measured step benchmark (CPU, smoke scale): SR/DS variants end to end.
+
+Wall-clock on CPU is NOT the perf deliverable (the roofline is), but this
+harness proves the variant ladder runs and produces the QoS telemetry the
+controller consumes; on a TPU deployment the same harness measures real
+MFU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def bench(arch: str = "qwen3-1.7b", steps: int = 8,
+          variants=((0, 1), (1, 1), (2, 1))) -> Dict:
+    cfg = registry.smoke(arch)
+    shape = dataclasses.replace(SHAPES["train_4k"], global_batch=4,
+                                seq_len=128)
+    mesh = make_host_mesh()
+    out = {}
+    with jax.set_mesh(mesh):
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        opt_cfg = adamw.AdamWConfig()
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                      global_batch=4, seq_len=128))
+        for depth, gran in variants:
+            rc = RunConfig(model=cfg, shape=shape, mesh=MeshConfig(),
+                           sr_prefetch_depth=depth, sr_granularity=gran)
+            step = jax.jit(steps_lib.build_train_step(cfg, rc, opt_cfg))
+            state = steps_lib.TrainState(params,
+                                         adamw.init(params, opt_cfg), None)
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in data.batch(0).items()}
+            state, m = step(state, batch)          # compile + warm
+            float(m["loss"])
+            t0 = time.time()
+            for i in range(steps):
+                state, m = step(state, batch)
+            float(m["loss"])
+            dt = (time.time() - t0) / steps
+            out[(depth, gran)] = dt
+            print(f"[train_bench] {arch} SR(depth={depth},gran={gran}): "
+                  f"{dt*1e3:.1f} ms/step")
+    return out
+
+
+if __name__ == "__main__":
+    bench()

@@ -1,0 +1,43 @@
+"""Design-space exploration with the paper's simulator.
+
+Sweeps backend media and controller features for one workload and prints
+the latency landscape — the experiment a systems designer would run
+before committing silicon (the paper's own methodology).
+
+  PYTHONPATH=src python examples/cxl_sim_explore.py --workload bfs
+"""
+import argparse
+
+from repro.sim import run
+from repro.sim.workloads import TABLE_1B
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="bfs",
+                    choices=sorted(TABLE_1B))
+    ap.add_argument("--ops", type=int, default=8000)
+    args = ap.parse_args()
+    w = args.workload
+    base = run("gpu-dram", w, "dram", n_ops=args.ops).exec_ns
+    print(f"workload={w} (pattern {TABLE_1B[w].pattern}), ideal GPU-DRAM "
+          f"baseline normalized to 1.0\n")
+    print(f"{'config':10s} " + " ".join(f"{m:>9s}" for m in
+                                        ("dram", "optane", "znand",
+                                         "nand")))
+    for cfg in ("uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr",
+                "cxl-ds"):
+        row = []
+        for med in ("dram", "optane", "znand", "nand"):
+            if cfg in ("uvm",) and med != "dram":
+                row.append("     -")
+                continue
+            r = run(cfg, w, med, n_ops=args.ops)
+            row.append(f"{r.exec_ns / base:8.1f}x")
+        print(f"{cfg:10s} " + " ".join(f"{v:>9s}" for v in row))
+    print("\n(x = slowdown vs GPU-DRAM; lower is better. SR recovers the "
+          "read gap, DS the write/GC tail — Fig. 9 in the paper.)")
+
+
+if __name__ == "__main__":
+    main()

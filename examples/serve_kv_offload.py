@@ -1,0 +1,39 @@
+"""Serving example: continuous batching + tiered KV page lifecycle.
+
+Shows the deterministic-store page retirement (slots free immediately,
+pages flush to the host tier in the background under QoS control) and
+prefix reuse from the cold tier.
+
+  PYTHONPATH=src python examples/serve_kv_offload.py
+"""
+import jax
+
+from repro.configs import registry
+from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = registry.smoke("gemma-2b")
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    with jax.set_mesh(make_host_mesh()):
+        params = M.init_model(jax.random.PRNGKey(0), cfg)
+        engine = ServingEngine(params, cfg, rc, n_slots=3, max_seq=64)
+        for rid in range(7):
+            engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
+                                  max_new_tokens=8))
+        finished = engine.run()
+    for r in finished[:3]:
+        print(f"request {r.rid}: prompt={r.prompt} -> {r.generated}")
+    print(f"{len(finished)} requests served, "
+          f"{engine.stats['decode_tokens']} tokens; "
+          f"{engine.stats['flushes']} page sets flushed to the cold tier "
+          f"({engine.store.bytes / 1024:.0f} KiB); "
+          f"staging never blocked: {engine.flusher.suppressed} flush "
+          f"windows deferred by QoS")
+
+
+if __name__ == "__main__":
+    main()

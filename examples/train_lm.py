@@ -1,0 +1,30 @@
+"""End-to-end training driver example: ~100M-class model, few hundred
+steps on CPU, with checkpoint/restart and the QoS variant ladder.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 200
+(Use --steps 30 for a fast demo.)
+"""
+import argparse
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+    # xlstm-125m's smoke config is a ~100M-class recurrent LM at full
+    # width scale-down; swap --arch for any of the 10 assigned configs
+    out = train(args.arch, smoke=True, steps=args.steps,
+                ckpt_dir=args.ckpt, global_batch=8, seq_len=128,
+                log_every=10)
+    first, last = out["history"][0]["loss"], out["history"][-1]["loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {args.steps} steps "
+          f"(checkpoints in {args.ckpt})")
+    assert last < first, "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

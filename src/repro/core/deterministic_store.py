@@ -1,0 +1,157 @@
+"""Deterministic store — fire-and-forget writes with staged writeback.
+
+Paper mechanism (Fig. 8): a store to a slow EP completes immediately by
+writing concurrently to GPU memory (a reserved, stack-organized staging
+region indexed from SRAM) and the EP; under tail latency (GC) the write is
+diverted to the staging region only and flushed in the background; reads
+consult the staging index first.
+
+JAX realization (DESIGN.md §4.3):
+
+* Training gradients: ``ds_grads`` pins gradient out-shardings to the pool
+  (FSDP) spec so the backward emits **reduce-scatter** — each device
+  completes its shard immediately and the full tensor is never
+  materialized. Disabling DS yields the all-reduce-then-slice baseline used
+  for the ablation.
+
+* Host-tier writeback (optimizer states, KV pages): a ``StagingRing`` of
+  bounded HBM slots written in-graph (dynamic_update_slice — the "stack"),
+  flushed between steps by the host runtime only while the QoS state allows
+  (DevLoad <= OPTIMAL). ``read_through`` serves reads from the ring first,
+  exactly the paper's read path during GC windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qos import DevLoad, QoSController
+from repro.parallel import sharding as shlib
+
+
+# ---------------------------------------------------------------------------
+# Gradient path (training)
+# ---------------------------------------------------------------------------
+
+
+def ds_grad_specs(param_specs: Any, enabled: bool) -> Any:
+    """Shardings the backward must deliver gradients in.
+
+    enabled  -> pool specs (reduce-scatter; deterministic store).
+    disabled -> gathered specs (all-reduce of the full gradient; the
+                baseline a conventional data-parallel step uses).
+    """
+    if enabled:
+        return param_specs
+    return shlib.gathered_specs(param_specs)
+
+
+def apply_ds(grads: Any, param_specs: Any, enabled: bool = True) -> Any:
+    """Constrain gradients to their DS placement inside the step."""
+    return shlib.constrain(grads, ds_grad_specs(param_specs, enabled))
+
+
+# ---------------------------------------------------------------------------
+# Staging ring (serving / host-tier writeback)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RingState:
+    """In-graph state: fixed slot buffer + metadata (all jnp arrays)."""
+
+    slots: Any              # pytree, each leaf [n_slots, ...]
+    keys: jnp.ndarray       # [n_slots] int32 logical address, -1 = empty
+    head: jnp.ndarray       # scalar int32: next write position
+    count: jnp.ndarray      # scalar int32: occupied slots
+
+
+def ring_init(n_slots: int, item_shape: Any) -> RingState:
+    slots = jax.tree_util.tree_map(
+        lambda s: jnp.zeros((n_slots,) + tuple(s.shape), s.dtype), item_shape)
+    return RingState(slots=slots,
+                     keys=jnp.full((n_slots,), -1, jnp.int32),
+                     head=jnp.zeros((), jnp.int32),
+                     count=jnp.zeros((), jnp.int32))
+
+
+def ring_write(state: RingState, key: jnp.ndarray, item: Any) -> RingState:
+    """Fire-and-forget store: O(1) write at head (stack push, Fig. 8 (2))."""
+    i = state.head
+    slots = jax.tree_util.tree_map(
+        lambda buf, x: jax.lax.dynamic_update_index_in_dim(
+            buf, x.astype(buf.dtype)[None] if x.ndim == buf.ndim - 1
+            else x.astype(buf.dtype), i, axis=0),
+        state.slots, item)
+    n = state.keys.shape[0]
+    return RingState(
+        slots=slots,
+        keys=state.keys.at[i].set(key.astype(jnp.int32)),
+        head=jnp.mod(i + 1, n),
+        count=jnp.minimum(state.count + 1, n))
+
+
+def ring_lookup(state: RingState, key: jnp.ndarray) -> Tuple[jnp.ndarray,
+                                                             jnp.ndarray]:
+    """Staging-index probe: (hit, slot_idx). Latest write wins."""
+    matches = state.keys == key.astype(jnp.int32)
+    n = state.keys.shape[0]
+    # recency rank: distance behind head (smaller = newer)
+    age = jnp.mod(state.head - 1 - jnp.arange(n), n)
+    slot = jnp.argmin(jnp.where(matches, age, n + 1))
+    return matches.any(), slot
+
+
+def read_through(state: RingState, key: jnp.ndarray, backing: Any) -> Any:
+    """Read path: staging ring first, else the backing (EP) value."""
+    hit, slot = ring_lookup(state, key)
+    return jax.tree_util.tree_map(
+        lambda buf, b: jnp.where(
+            hit, jax.lax.dynamic_index_in_dim(buf, slot, 0, keepdims=False
+                                              ).astype(b.dtype), b),
+        state.slots, backing)
+
+
+def ring_occupancy(state: RingState) -> jnp.ndarray:
+    return state.count.astype(jnp.float32) / state.keys.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Host-side flusher (between steps; the background drain of Fig. 8 (3))
+# ---------------------------------------------------------------------------
+
+
+class StagingFlusher:
+    """Drains staged items to the backing tier between steps.
+
+    The sink is a callable (e.g. checkpointer write, host-memory pool
+    insert). Flushing is suppressed while DevLoad >= MODERATE, mirroring the
+    controller's divert-on-congestion behaviour; suspended writes are kept
+    (the ring keeps absorbing) and resumed when load drops — reads remain
+    correct throughout because of ``read_through``.
+    """
+
+    def __init__(self, sink: Callable[[int, Any], None],
+                 qos: Optional[QoSController] = None):
+        self.sink = sink
+        self.qos = qos or QoSController()
+        self.pending: List[Tuple[int, Any]] = []
+        self.flushed = 0
+        self.suppressed = 0
+
+    def stage(self, key: int, value: Any) -> None:
+        self.pending.append((key, value))
+
+    def maybe_flush(self) -> int:
+        if not self.qos.flush_enabled:
+            self.suppressed += 1
+            return 0
+        n = len(self.pending)
+        for key, value in self.pending:
+            self.sink(key, value)
+        self.pending.clear()
+        self.flushed += n
+        return n

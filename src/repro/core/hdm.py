@@ -1,0 +1,92 @@
+"""HDMStore — host-managed device memory over a parameter pytree.
+
+The paper's HDM decoder maps each CXL root port's endpoint into one system
+address space so compute units issue plain loads/stores against expanded
+memory (DESIGN.md §4.1). Here the "address map" is a per-leaf *tier*
+assignment plus the sharding that realizes it on the mesh:
+
+  DEVICE : replicated across the data axis — always resident in local HBM.
+  POOL   : FSDP-sharded across the data axis — the DRAM-EP expander. A layer
+           is *materialized* (all-gathered) on use; the speculative-read
+           pipeline issues that gather ahead of the consumer.
+  HOST   : POOL sharding + pinned_host memory kind — the SSD-EP expander
+           (TPU only; XLA:CPU cannot compile the placement custom-call).
+
+`HDMStore` is deliberately thin: it owns *placement*, while the SR/DS modules
+own *movement*. That split mirrors the paper (HDM decoder vs root-port queue
+logic).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel import sharding as shlib
+
+DEVICE, POOL, HOST = "device", "pool", "host"
+
+
+@dataclasses.dataclass
+class HDMStore:
+    """Tiered placement for a param (or optimizer-state) pytree."""
+
+    mesh: Mesh
+    tier: str = POOL                 # default tier for large leaves
+    enable_host_tier: bool = False   # SSD-EP analogue; TPU only
+    multi_pod_fsdp: bool = False     # ZeRO across pods as well
+
+    # ------------------------------------------------------------- specs
+    def specs(self, params_shape: Any) -> Any:
+        """PartitionSpec tree for the resident (expanded) form."""
+        return shlib.param_specs(params_shape, tier=self.tier,
+                                 multi_pod_fsdp=self.multi_pod_fsdp)
+
+    def gathered_specs(self, params_shape: Any) -> Any:
+        """Specs after a speculative-read gather (FSDP axis stripped)."""
+        return shlib.gathered_specs(self.specs(params_shape))
+
+    def shardings(self, params_shape: Any) -> Any:
+        mk = None
+        if self.tier == HOST and self.enable_host_tier:
+            mk = "pinned_host"
+        return shlib.shardings_from_specs(self.mesh, self.specs(params_shape),
+                                          memory_kind=mk)
+
+    # --------------------------------------------------------- movement
+    def materialize(self, layer_params: Any, layer_specs: Any) -> Any:
+        """Gather one layer from the pool into the resident form.
+
+        This is the load path of the HDM map: a sharding constraint that
+        forces the FSDP axis to be gathered. The SR pipeline decides *when*
+        this runs relative to compute (repro.core.speculative_read).
+        """
+        gathered = shlib.gathered_specs(layer_specs)
+        return shlib.constrain(layer_params, gathered)
+
+    def writeback(self, layer_params: Any, layer_specs: Any) -> Any:
+        """Scatter (reduce-scatter for grads) back into pool placement —
+        the deterministic-store path: shards complete immediately."""
+        return shlib.constrain(layer_params, layer_specs)
+
+
+def bytes_per_device(params_shape: Any, store: HDMStore) -> int:
+    """Static estimate of resident bytes/device under the tier map."""
+    specs = store.specs(params_shape)
+    n_dev = store.mesh.devices.size
+    mesh_sizes = dict(zip(store.mesh.axis_names, store.mesh.devices.shape))
+
+    def leaf_bytes(leaf, spec):
+        total = leaf.size * leaf.dtype.itemsize
+        shard = 1
+        for s in jax.tree_util.tree_leaves(tuple(spec)) if spec else []:
+            if s in mesh_sizes:
+                shard *= mesh_sizes[s]
+        return total // max(shard, 1)
+
+    leaves = jax.tree_util.tree_leaves(params_shape)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    return sum(leaf_bytes(l, s) for l, s in zip(leaves, spec_leaves))

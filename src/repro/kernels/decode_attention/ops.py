@@ -1,0 +1,31 @@
+"""Jitted wrapper for the paged flash-decode kernel (model layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import paged_flash_decode
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("logit_softcap",))
+def decode(q, k_pages, v_pages, kv_len, *, logit_softcap: float = 0.0):
+    """q: [B, 1, H, D]; pages: [B, P, page, Hkv, D]; kv_len scalar.
+
+    Returns [B, 1, H, D] — the local-shard result (combine across page
+    shards outside).
+    """
+    b, _, h, d = q.shape
+    p, page, hkv = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    g = h // hkv
+    qk = q.reshape(b, hkv, g, d)
+    kp = jnp.moveaxis(k_pages, 3, 1)          # [B, Hkv, P, page, D]
+    vp = jnp.moveaxis(v_pages, 3, 1)
+    o = paged_flash_decode(qk, kp, vp, kv_len, logit_softcap=logit_softcap,
+                           interpret=_interpret())
+    return o.reshape(b, 1, h, d)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the paged flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_flash_decode_ref(q, k_pages, v_pages, kv_len):
+    """q: [B, Hkv, G, D]; pages: [B, Hkv, P, page, D] -> [B, Hkv, G, D]."""
+    b, hkv, g, d = q.shape
+    p, page = k_pages.shape[2], k_pages.shape[3]
+    k = k_pages.reshape(b, hkv, p * page, d).astype(jnp.float32)
+    v = v_pages.reshape(b, hkv, p * page, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32), k) / (d ** 0.5)
+    pos = jnp.arange(p * page)
+    s = jnp.where(pos[None, None, None] < kv_len, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgk,bhkd->bhgd", w, v).astype(q.dtype)

@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (blockwise causal GQA) — prefill/train path.
+
+Grid: (batch, kv_head, q_blocks, kv_blocks); the kv_blocks axis is
+innermost so the online-softmax state lives in VMEM scratch across
+iterations and the output block is written once, on the last visited kv
+block. Causal blocks above the diagonal are skipped with `pl.when`
+(their iterations are no-ops, which XLA's Mosaic pipeline elides).
+
+Block shapes keep the MXU happy: the (q_block, head_dim) operand tiles are
+multiples of (8, 128) for f32/bf16, and the GQA group dimension rides in
+the sublane axis with the q block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 causal: bool, q_block: int, kv_block: int, n_kv: int,
+                 scale: float, logit_softcap: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # causal: the block is skipped entirely when its kv range is wholly
+    # above the diagonal of the q range
+    run = (not causal) or (kj * kv_block <= qi * q_block + q_block - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0]                   # [G, Bq, D]
+        k = k_ref[0, 0]                   # [Bk, D]
+        v = v_ref[0, 0]                   # [Bk, D]
+        g, bq, d = q.shape
+        s = jax.lax.dot_general(
+            q.reshape(g * bq, d), k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [G*Bq, Bk]
+        if logit_softcap > 0.0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        if causal:
+            q_pos = qi * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (g, bq, k.shape[0]), 1).reshape(g * bq, -1)
+            kv_pos = kj * kv_block + jax.lax.broadcasted_iota(
+                jnp.int32, (g * bq, k.shape[0]), 1)
+            s = jnp.where(q_pos >= kv_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        g, bq, d = q_ref.shape[2], q_ref.shape[3], q_ref.shape[4]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(g, bq, d).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, q_block: int = 256,
+                    kv_block: int = 256, logit_softcap: float = 0.0,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B, Hkv, G, S, D]; k/v: [B, Hkv, S, D] -> [B, Hkv, G, S, D]."""
+    b, hkv, g, s, d = q.shape
+    skv = k.shape[2]
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, skv)
+    assert s % q_block == 0 and skv % kv_block == 0
+    nq, nkv = s // q_block, skv // kv_block
+    scale = 1.0 / (d ** 0.5)
+
+    grid = (b, hkv, nq, nkv)
+    kernel = functools.partial(
+        _attn_kernel, causal=causal, q_block=q_block, kv_block=kv_block,
+        n_kv=nkv, scale=scale, logit_softcap=logit_softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, q_block, d),
+                         lambda bi, hi, qi, kj: (bi, hi, 0, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda bi, hi, qi, kj: (bi, hi, kj, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda bi, hi, qi, kj: (bi, hi, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, q_block, d),
+                               lambda bi, hi, qi, kj: (bi, hi, 0, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * q_block, d), jnp.float32),
+            pltpu.VMEM((g * q_block, 1), jnp.float32),
+            pltpu.VMEM((g * q_block, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q.reshape(b, hkv, g, s, d), k, v)

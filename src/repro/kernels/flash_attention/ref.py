@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        logit_softcap: float = 0.0):
+    """q: [B, Hkv, G, S, D]; k/v: [B, Hkv, S, D] -> [B, Hkv, G, S, D]."""
+    b, hkv, g, s, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_softcap > 0.0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool))
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,80 @@
+"""Pallas TPU paged weight-streaming matmul — speculative read in a kernel.
+
+The HDM tier holds weights as *pages* in HBM (the EP's backend); a logical
+weight matrix is assembled from a page table. The page ids ride in
+scalar-prefetch memory, so the BlockSpec index map resolves the next
+page's address BEFORE its DMA is issued — the kernel-level MemSpecRd: the
+address is pre-shared, and Mosaic's automatic double buffering overlaps
+the page fetch (HBM -> VMEM) with the MXU work on the current page,
+exactly the compute-shadow overlap of the paper's SR.
+
+y[m, n] = sum_k x[m, k_tile(k)] @ W_pages[page_ids[k]][n_tile]
+
+Grid: (M_blocks, N_blocks, K_pages) with K innermost; accumulation in a
+VMEM scratch tile, one output write on the last K page.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stream_kernel(pid_ref, x_ref, w_ref, y_ref, acc_ref, *, n_k: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def paged_matmul(x: jnp.ndarray, w_pages: jnp.ndarray,
+                 page_ids: jnp.ndarray, *, block_m: int = 256,
+                 block_n: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: [M, K]; w_pages: [n_pages, page_k, N]; page_ids: [K // page_k].
+
+    The logical weight is vstack(w_pages[page_ids]); pages may live
+    anywhere in the pool (the HDM map). Returns y [M, N] = x @ W.
+    """
+    m, k = x.shape
+    n_pages, page_k, n = w_pages.shape
+    n_k = k // page_k
+    assert page_ids.shape == (n_k,)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0
+
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(_stream_kernel, n_k=n_k)
+
+    # x tiles follow the LOGICAL k index; w pages are looked up through
+    # the prefetched page table (the pre-shared address)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, page_k),
+                             lambda mi, ni, kj, pid: (mi, kj)),
+                pl.BlockSpec((1, page_k, block_n),
+                             lambda mi, ni, kj, pid: (pid[kj], 0, ni)),
+            ],
+            out_specs=pl.BlockSpec((block_m, block_n),
+                                   lambda mi, ni, kj, pid: (mi, ni)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )(jnp.asarray(page_ids, jnp.int32), x, w_pages)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the paged streaming matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_matmul_ref(x, w_pages, page_ids):
+    """x: [M, K]; w_pages: [n_pages, page_k, N]; page_ids: [K // page_k]."""
+    n_pages, page_k, n = w_pages.shape
+    w = w_pages[jnp.asarray(page_ids)].reshape(-1, n)   # [K, N]
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the SSD scan kernel: sequential recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xdt, bc, cc, la):
+    """Sequential state-space recurrence (time-step oracle).
+
+    xdt [B,H,C,Q,P]; bc/cc [B,C,Q,N]; la [B,H,C,Q] (within-chunk cumsum of
+    log a). Returns y [B,H,C,Q,P].
+    """
+    b, h, c, q, p = xdt.shape
+    n = bc.shape[3]
+    # undo the chunk cumsum into per-step log a
+    la_flat = la.reshape(b, h, c * q)
+    prev = jnp.concatenate(
+        [jnp.zeros((b, h, c, 1)), la[..., :-1]], axis=-1).reshape(b, h,
+                                                                  c * q)
+    step_log_a = (la_flat - prev)                       # [B,H,T]
+    x = xdt.reshape(b, h, c * q, p)
+    bm = bc.reshape(b, c * q, n)
+    cm = cc.reshape(b, c * q, n)
+
+    def step(hstate, inp):
+        xt, bt, ct, lat = inp
+        hstate = hstate * jnp.exp(lat)[..., None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", hstate, ct)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n))
+    _, ys = jax.lax.scan(
+        step, h0, (jnp.moveaxis(x, 2, 0), jnp.moveaxis(bm, 1, 0),
+                   jnp.moveaxis(cm, 1, 0), jnp.moveaxis(step_log_a, 2, 0)))
+    return jnp.moveaxis(ys, 0, 2).reshape(b, h, c, q, p)

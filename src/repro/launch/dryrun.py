@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+we build the production mesh (16x16 single-pod, 2x16x16 multi-pod), lower
+the step with full-size ShapeDtypeStruct inputs (no allocation), compile,
+and record memory_analysis / cost_analysis / the collective schedule parsed
+from HLO. Output lands in ``artifacts/dryrun/<cell>.json`` which
+``benchmarks/roofline.py`` and EXPERIMENTS.md consume.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod    # 512-chip pass
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import registry
+from repro.configs.base import (MeshConfig, RunConfig, SHAPES,
+                                shape_applicable)
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+# HLO collective ops whose operand bytes constitute the collective roofline
+# term. collective-permute moves one operand; all-gather moves the output.
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\(")
+
+
+def _dtype_bytes(dt: str) -> int:
+    return {"f64": 8, "f32": 4, "s32": 4, "u32": 4, "bf16": 2, "f16": 2,
+            "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+            "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1}.get(dt, 4)
+
+
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|"
+                       r"pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+
+
+def _first_shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _dtype_bytes(dt)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output-shape bytes of every collective op in the HLO, by kind.
+
+    These are *per-participating-device* payload bytes as XLA reports
+    shapes post-SPMD-partitioning (the module is the per-device program).
+    """
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m or "-start" in line.split("=")[0]:
+            # count either the fused op or the -start of an async pair, not
+            # both; async pairs appear as -start/-done — take -done lines
+            # only when a -start exists; simplest robust rule: skip -start
+            pass
+        if not m:
+            continue
+        head = line.split("=", 1)[0]
+        if "-done" in head:
+            continue  # bytes counted at the -start line (has the shape)
+        kind = m.group(1)
+        nbytes = _first_shape_bytes(line.split("=", 1)[1])
+        out[kind] += nbytes
+        out["count"] += 1
+    return out
+
+
+def reduced_depth_cfg(cfg, k: int):
+    """Config with n_stacked == k (k scan iterations), same family/width."""
+    import dataclasses
+    if cfg.family in ("dense", "moe", "audio"):
+        return dataclasses.replace(cfg, n_layers=k)
+    if cfg.family == "vlm":
+        return dataclasses.replace(cfg, n_layers=k * cfg.cross_attn_period)
+    if cfg.family == "hybrid":
+        return dataclasses.replace(cfg,
+                                   n_layers=k * cfg.shared_block_period)
+    return dataclasses.replace(cfg, n_layers=k * cfg.slstm_every)  # ssm
+
+
+def _compile_cell(cfg, shape, rc, mesh):
+    cell = steps_lib.assemble(cfg, shape, rc, mesh)
+    with jax.set_mesh(mesh):
+        lowered = cell.jitted.lower(*cell.args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _extract(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    return {"flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+            "bytes_accessed": (float(cost.get("bytes accessed", 0.0))
+                               if cost else 0.0),
+            "collective_bytes": collective_bytes(hlo)}
+
+
+def _combine(e2: dict, e3: dict, n: int) -> dict:
+    """edges + n * body, where body = e3 - e2 (both fully unrolled).
+
+    k=2/3 (not 1/2) because a depth-1 model degenerates: the SR prefetch
+    wrap-around double-gathers the single layer, polluting the difference.
+    """
+    out = {}
+    for key in ("flops", "bytes_accessed"):
+        body = e3[key] - e2[key]
+        out[key] = max(e2[key] - 2 * body + n * body, 0.0)
+    coll = {}
+    for k in e2["collective_bytes"]:
+        body = e3["collective_bytes"][k] - e2["collective_bytes"][k]
+        coll[k] = max(e2["collective_bytes"][k] - 2 * body + n * body, 0.0)
+    out["collective_bytes"] = coll
+    return out
+
+
+def _polyfit_cost(pts: dict, target_seq: int) -> dict:
+    """Evaluate each cost term at ``target_seq`` from short-seq samples.
+
+    2 points -> affine (c0 + c1*S, exact for attention-free archs);
+    3 points -> quadratic (adds the attention S^2 term, exact for the
+    hybrid's shared-attention blocks). Vandermonde solve per term.
+    """
+    import numpy as np
+    seqs = sorted(pts)
+    deg = len(seqs) - 1
+    V = np.vander(np.array(seqs, float), deg + 1, increasing=True)
+
+    def fit(vals):
+        coef = np.linalg.solve(V, np.array(vals, float))
+        return float(max(sum(c * target_seq ** i
+                             for i, c in enumerate(coef)), 0.0))
+
+    out = {"flops": fit([pts[s]["flops"] for s in seqs]),
+           "bytes_accessed": fit([pts[s]["bytes_accessed"] for s in seqs])}
+    coll = {}
+    for k in pts[seqs[0]]["collective_bytes"]:
+        coll[k] = fit([pts[s]["collective_bytes"][k] for s in seqs])
+    out["collective_bytes"] = coll
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rc_overrides: dict | None = None, verbose: bool = True,
+             with_cost: bool = False) -> dict:
+    from repro.models import model as M
+
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": why}
+
+    mesh_cfg = MeshConfig(multi_pod=multi_pod)
+    rc = RunConfig(model=cfg, shape=shape, mesh=mesh_cfg,
+                   **(rc_overrides or {}))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape, rc, mesh)
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[k] = getattr(mem, k, None)
+    module = _extract(compiled)
+
+    res = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.devices.size,
+        "status": "ok",
+        "compile_s": round(t_compile, 2),
+        "module": module,           # scan body counted ONCE (raw HLO view)
+        "memory_analysis": mem_d,
+        "n_stacked": M.n_stacked(cfg),
+        "model_flops": None,
+        "rc": {k: v for k, v in (rc_overrides or {}).items()},
+    }
+
+    # analytic MODEL_FLOPS: 6*N_active*D for train (fwd+bwd), 2*N_active*D
+    # for single forward kinds
+    n_act = cfg.n_active_params()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    res["model_flops"] = (6 if shape.kind == "train" else 2) * n_act * tokens
+
+    if with_cost:
+        # exact per-layer costs from fully-unrolled reduced-depth compiles
+        # (inner sequence scans also unrolled — see layers.set_unroll_inner)
+        import dataclasses as _dc
+        from repro.models import layers as layers_lib
+        t1 = time.time()
+        layers_lib.set_unroll_inner(True)
+        try:
+            # ssm/hybrid at long sequences: the unrolled chunk scans make
+            # the compile pathological (observed ~1 h for xlstm at 32k).
+            # Their per-token cost laws are known exactly — ssm terms are
+            # affine in S, hybrid adds the shared-attention quadratic — so
+            # fit at short sequences and evaluate at the target S.
+            fit_seqs = None
+            if shape.kind != "decode" and shape.seq_len > 2048:
+                if cfg.family == "ssm":
+                    fit_seqs = (1024, 2048)            # affine
+                elif cfg.family == "hybrid":
+                    fit_seqs = (1024, 2048, 4096)      # quadratic
+
+            def extract_at(seq_len):
+                shape_s = _dc.replace(
+                    shape, seq_len=seq_len) if seq_len else shape
+                e = {}
+                for k in (2, 3):
+                    cfg_k = reduced_depth_cfg(cfg, k)
+                    rc_k = _dc.replace(rc, model=cfg_k, scan_unroll=k)
+                    e[k] = _extract(_compile_cell(cfg_k, shape_s, rc_k,
+                                                  mesh))
+                return _combine(e[2], e[3], M.n_stacked(cfg))
+
+            if fit_seqs is None:
+                res["corrected"] = extract_at(None)
+            else:
+                pts = {s: extract_at(s) for s in fit_seqs}
+                res["corrected"] = _polyfit_cost(pts, shape.seq_len)
+                res["cost_fit_seqs"] = list(fit_seqs)
+        finally:
+            layers_lib.set_unroll_inner(False)
+        res["cost_extract_s"] = round(time.time() - t1, 2)
+
+    if verbose:
+        print(f"  mem={mem_d}")
+        print(f"  module: flops={module['flops']:.3e} "
+              f"bytes={module['bytes_accessed']:.3e}")
+        if with_cost:
+            c = res["corrected"]
+            print(f"  corrected: flops={c['flops']:.3e} "
+                  f"bytes={c['bytes_accessed']:.3e} "
+                  f"coll={ {k: round(v/1e9, 2) for k, v in c['collective_bytes'].items()} } GB")
+            print(f"  model_flops={res['model_flops']:.3e} "
+                  f"useful={res['model_flops']/max(c['flops']*res['n_devices'],1):.3f}")
+    return res
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true",
+                    help="run single-pod AND multi-pod for each cell")
+    ap.add_argument("--tag", default=None,
+                    help="artifact suffix for rc-override variants")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="RunConfig overrides k=v (int/bool/str)")
+    ap.add_argument("--cost", action="store_true",
+                    help="also extract exact per-layer costs (roofline)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                pass
+        overrides[k] = v
+
+    archs = [args.arch] if args.arch else sorted(registry.ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    ART.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}"
+                if args.tag:
+                    tag += f"__{args.tag}"
+                print(f"[dryrun] {tag}", flush=True)
+                try:
+                    res = run_cell(arch, shape_name, multi_pod=mp,
+                                   rc_overrides=overrides,
+                                   with_cost=args.cost)
+                except Exception as e:  # a failure here is a sharding bug
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "failed", "error": str(e)[-2000:]}
+                    failures += 1
+                (ART / f"{tag}.json").write_text(json.dumps(res, indent=1))
+                print(f"  -> {res['status']}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

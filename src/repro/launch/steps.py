@@ -1,0 +1,262 @@
+"""Step builders: train_step / prefill_step / serve_step with shardings.
+
+This is the seam between the model zoo and the distributed runtime: every
+launcher (train.py, serve.py, dryrun.py) and benchmark obtains its jitted
+step, input ShapeDtypeStructs, and in/out shardings from here, so the
+sharding story is defined exactly once.
+
+The paper's mechanisms appear as:
+  * params/optimizer pool placement (HDMStore tier map),
+  * the SR stream inside loss_fn/decode_step (speculative read),
+  * gradient out-shardings pinned to pool specs => backward emits
+    reduce-scatter, never a materialized full gradient (deterministic
+    store), optimizer update runs on the shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, RunConfig, ShapeConfig)
+from repro.core import deterministic_store as ds
+from repro.core.hdm import HDMStore
+from repro.models import model as M
+from repro.models.layers import pdtype
+from repro.optim import adamw
+from repro.optim import compression
+from repro.parallel import sharding as shlib
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    residuals: Optional[Any]  # int8-EF residuals (grad_compression only)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — the dry-run stand-ins; also used to build
+# real batches in tests with tree_map over random bits)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rc: RunConfig) -> Dict[str, Any]:
+    """Model inputs for the step kind, as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    tok_shape = (B, cfg.n_codebooks, S) if cfg.family == "audio" else (B, S)
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        out = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32),
+               "labels": jax.ShapeDtypeStruct(tok_shape, i32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct(tok_shape, i32)}
+    else:  # decode: one new token against a KV cache of S
+        one = (B, cfg.n_codebooks, 1) if cfg.family == "audio" else (B, 1)
+        out = {"tokens": jax.ShapeDtypeStruct(one, i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.d_model), pdtype(cfg))
+    return out
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                rc: RunConfig) -> Dict[str, P]:
+    dp = ("pod", "data") if rc.mesh.multi_pod else "data"
+    if shape.global_batch == 1:
+        dp = None  # long-context single-stream: no batch parallelism
+
+    def spec(path, leaf):
+        return P(*([dp] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(
+        spec, input_specs(cfg, shape, rc))
+
+
+# ---------------------------------------------------------------------------
+# state construction (shapes first — dry-run never allocates)
+# ---------------------------------------------------------------------------
+
+
+def state_shapes(cfg: ModelConfig, rc: RunConfig,
+                 opt_cfg: adamw.AdamWConfig) -> TrainState:
+    params = jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    opt = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+    residuals = None
+    if rc.grad_compression == "int8_ef":
+        residuals = jax.eval_shape(compression.init_residuals, params)
+    return TrainState(params=params, opt=opt, residuals=residuals)
+
+
+def state_specs(cfg: ModelConfig, rc: RunConfig,
+                state: TrainState) -> TrainState:
+    pspecs = shlib.param_specs(
+        state.params, tier=rc.param_tier,
+        multi_pod_fsdp=rc.mesh.multi_pod)
+    ospecs = adamw.opt_specs(
+        shlib.param_specs(state.params, tier=rc.optimizer_tier,
+                          multi_pod_fsdp=rc.mesh.multi_pod),
+        state.opt)
+    rspecs = pspecs if state.residuals is not None else None
+    return TrainState(params=pspecs, opt=ospecs, residuals=rspecs)
+
+
+def shardings(mesh: Mesh, specs: Any) -> Any:
+    return shlib.shardings_from_specs(mesh, specs)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, rc: RunConfig,
+                     opt_cfg: adamw.AdamWConfig):
+    """Returns step(state, batch) -> (state, metrics), pure and jittable."""
+
+    def step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state.params
+        pspecs = shlib.param_specs(params, tier=rc.param_tier,
+                                   multi_pod_fsdp=rc.mesh.multi_pod)
+
+        def lf(p, b):
+            return M.loss_fn(p, cfg, rc, b, pspecs, mode="train")
+
+        if rc.microbatches > 1:
+            loss, grads = _accumulated_grads(lf, params, batch,
+                                             rc.microbatches)
+        else:
+            loss, grads = jax.value_and_grad(lf)(params, batch)
+
+        # deterministic store: gradients complete as pool shards
+        grads = ds.apply_ds(grads, pspecs, enabled=rc.ds_enabled)
+
+        residuals = state.residuals
+        if residuals is not None:
+            grads, residuals = compression.compress_grads(grads, residuals)
+
+        new_params, new_opt, om = adamw.update(grads, state.opt, params,
+                                               opt_cfg)
+        new_params = shlib.constrain(new_params, pspecs)  # stay in the pool
+        metrics = {"loss": loss, **om}
+        return TrainState(new_params, new_opt, residuals), metrics
+
+    return step
+
+
+def _accumulated_grads(lf, params, batch, n_micro: int):
+    """Gradient accumulation over leading-batch microbatch splits."""
+    def split(x):
+        b = x.shape[0]
+        return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+    micro = jax.tree_util.tree_map(split, batch)
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, g = jax.value_and_grad(lf)(params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+        return (loss_acc + loss, g_acc), None
+
+    (loss, grads), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zeros), micro)
+    inv = 1.0 / n_micro
+    grads = jax.tree_util.tree_map(
+        lambda g, p: (g * inv).astype(p.dtype), grads, params)
+    return loss * inv, grads
+
+
+# ---------------------------------------------------------------------------
+# serve steps
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, rc: RunConfig):
+    def step(params, batch):
+        pspecs = shlib.param_specs(params, tier=rc.param_tier,
+                                   multi_pod_fsdp=rc.mesh.multi_pod)
+        return M.prefill_step(params, cfg, rc, batch, pspecs)
+    return step
+
+
+def build_serve_step(cfg: ModelConfig, rc: RunConfig):
+    """One decode step: (params, cache, tokens) -> (logits, cache)."""
+    def step(params, cache, tokens):
+        pspecs = shlib.param_specs(params, tier=rc.param_tier,
+                                   multi_pod_fsdp=rc.mesh.multi_pod)
+        return M.decode_step(params, cfg, rc, tokens, cache, pspecs)
+    return step
+
+
+# ---------------------------------------------------------------------------
+# jit assembly for a (cfg, shape, mesh) cell — used by dryrun and drivers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LoweredCell:
+    kind: str
+    jitted: Any
+    args: Tuple        # ShapeDtypeStructs (or arrays) in call order
+
+
+def assemble(cfg: ModelConfig, shape: ShapeConfig, rc: RunConfig,
+             mesh: Mesh, opt_cfg: Optional[adamw.AdamWConfig] = None
+             ) -> LoweredCell:
+    """Build the jitted step + abstract args for one dry-run cell."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(
+        learning_rate=rc.learning_rate, weight_decay=rc.weight_decay,
+        grad_clip=rc.grad_clip)
+    ispecs = input_specs(cfg, shape, rc)
+    bspecs = batch_specs(cfg, shape, rc)
+    bshard = shlib.shardings_from_specs(mesh, bspecs)
+
+    if shape.kind == "train":
+        st_shapes = state_shapes(cfg, rc, opt_cfg)
+        st_specs = state_specs(cfg, rc, st_shapes)
+        st_shard = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), st_specs,
+            is_leaf=lambda x: isinstance(x, P))
+        step = build_train_step(cfg, rc, opt_cfg)
+        metric_shard = NamedSharding(mesh, P())
+        jitted = jax.jit(step,
+                         in_shardings=(st_shard, bshard),
+                         out_shardings=(st_shard, metric_shard),
+                         donate_argnums=(0,))
+        return LoweredCell("train", jitted, (st_shapes, ispecs))
+
+    pshapes = jax.eval_shape(
+        lambda: M.init_model(jax.random.PRNGKey(0), cfg))
+    pspecs = shlib.param_specs(pshapes, tier=rc.param_tier,
+                               multi_pod_fsdp=rc.mesh.multi_pod)
+    pshard = shlib.shardings_from_specs(mesh, pspecs)
+
+    if shape.kind == "prefill":
+        step = build_prefill_step(cfg, rc)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=NamedSharding(mesh, P()))
+        return LoweredCell("prefill", jitted, (pshapes, ispecs))
+
+    # decode
+    cache = M.cache_init(cfg, rc, shape.global_batch, max_seq=shape.seq_len,
+                         as_shape=True)
+    cspecs = M.cache_specs(cfg, rc, shape.global_batch)
+    cshard = shlib.shardings_from_specs(mesh, cspecs)
+    tshard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), batch_specs(cfg, shape, rc))
+    step = build_serve_step(cfg, rc)
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, cshard, tshard["tokens"]),
+                     out_shardings=(NamedSharding(mesh, P()), cshard),
+                     donate_argnums=(1,))
+    return LoweredCell("decode", jitted,
+                       (pshapes, cache, ispecs["tokens"]))

@@ -1,0 +1,143 @@
+"""Training driver: data -> step -> telemetry -> checkpoint, fault-aware.
+
+The paper's controller appears here as the *between-step* adaptation loop
+(DESIGN.md §4.4): step variants are pre-compiled for a ladder of
+(sr_prefetch_depth, sr_granularity) settings; per-step telemetry (wall
+time vs roofline expectation, staging occupancy) drives the DevLoad state
+machine which picks the active variant — exactly the queue logic's
+granularity ladder, at step granularity, because XLA programs are static.
+
+Usage (smoke scale, CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import registry
+from repro.configs.base import (MeshConfig, ModelConfig, RunConfig, SHAPES,
+                                ShapeConfig, PEAK_FLOPS_BF16)
+from repro.core.qos import RuntimeQoS, StepTelemetry
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import Heartbeat, StragglerMitigator
+
+
+def build_variants(cfg: ModelConfig, rc: RunConfig, mesh,
+                   opt_cfg: adamw.AdamWConfig, ladder=None) -> Dict:
+    """Pre-compiled step variants keyed by (depth, granularity)."""
+    ladder = ladder or [(0, 1), (1, 1), (2, 1), (1, 2)]
+    variants = {}
+    for depth, gran in ladder:
+        rc_v = dataclasses.replace(rc, sr_prefetch_depth=depth,
+                                   sr_granularity=gran)
+        variants[(depth, gran)] = jax.jit(
+            steps_lib.build_train_step(cfg, rc_v, opt_cfg),
+            donate_argnums=(0,))
+    return variants
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 20,
+          shape_name: str = "train_4k", ckpt_dir: Optional[str] = None,
+          global_batch: int = 8, seq_len: int = 64,
+          log_every: int = 5, resume: bool = False) -> Dict:
+    cfg = registry.smoke(arch) if smoke else registry.get(arch)
+    base_shape = SHAPES[shape_name]
+    shape = (dataclasses.replace(base_shape, global_batch=global_batch,
+                                 seq_len=seq_len) if smoke else base_shape)
+    mesh = make_host_mesh() if smoke else make_production_mesh()
+    rc = RunConfig(model=cfg, shape=shape, mesh=MeshConfig())
+    opt_cfg = adamw.AdamWConfig(learning_rate=rc.learning_rate,
+                                total_steps=max(steps, 10))
+
+    with jax.set_mesh(mesh):
+        params = M.init_model(jax.random.PRNGKey(rc.seed), cfg)
+        opt = adamw.init(params, opt_cfg)
+        state = steps_lib.TrainState(params, opt, None)
+
+        data_cfg = DataConfig(
+            vocab_size=cfg.vocab_size, global_batch=shape.global_batch,
+            seq_len=shape.seq_len, seed=rc.seed,
+            n_codebooks=cfg.n_codebooks if cfg.family == "audio" else 0,
+            vision_tokens=cfg.n_vision_tokens if cfg.family == "vlm" else 0,
+            d_model=cfg.d_model)
+
+        ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+        start_step = 0
+        if ckpt and resume and ckpt.latest_step() is not None:
+            start_step, state, extra = ckpt.restore()
+            print(f"[train] resumed from step {start_step}")
+
+        pipe = Pipeline(data_cfg, start_step=start_step)
+        variants = build_variants(cfg, rc, mesh, opt_cfg)
+        qos = RuntimeQoS(list(variants))
+        active = (rc.sr_prefetch_depth, rc.sr_granularity)
+
+        # roofline expectation for the telemetry's service ratio
+        tokens = shape.global_batch * shape.seq_len
+        exp_s = 6 * cfg.n_active_params() * tokens / (
+            mesh.devices.size * PEAK_FLOPS_BF16)
+
+        hb = Heartbeat(n_workers=1)
+        strag = StragglerMitigator()
+        history = []
+        t_prev: Optional[float] = None
+        for _ in range(steps):
+            step_idx, batch = next(pipe)
+            t0 = time.time()
+            state, metrics = variants[active](state, batch)
+            loss = float(metrics["loss"])    # sync point
+            dt = time.time() - t0
+            hb.stamp(0, step_idx, dt)
+            strag.assess(hb.step_times())
+            active = qos.observe(StepTelemetry(
+                step=step_idx, wall_time_s=dt, expected_time_s=exp_s,
+                staging_occupancy=0.0))
+            if active not in variants:
+                active = min(variants, key=lambda v: abs(v[0] - active[0]))
+            history.append({"step": step_idx, "loss": loss, "dt": dt,
+                            "variant": active})
+            if step_idx % log_every == 0:
+                print(f"[train] step={step_idx} loss={loss:.4f} "
+                      f"dt={dt*1e3:.0f}ms variant={active}", flush=True)
+            if ckpt and step_idx and step_idx % 50 == 0:
+                ckpt.save(step_idx, state, extra=pipe.state())
+        if ckpt:
+            ckpt.save(steps - 1 + start_step, state, extra=pipe.state(),
+                      blocking=True)
+        pipe.close()
+    return {"history": history,
+            "final_loss": history[-1]["loss"] if history else None}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    args = ap.parse_args()
+    out = train(args.arch, smoke=args.smoke, steps=args.steps,
+                shape_name=args.shape, ckpt_dir=args.ckpt_dir,
+                resume=args.resume, global_batch=args.global_batch,
+                seq_len=args.seq_len)
+    print(f"[train] done: final_loss={out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Common layer primitives: norms, RoPE, embeddings, MLP variants.
+
+Pure-functional: every layer is (init_fn, apply_fn) over plain dicts of
+jnp arrays. Params live in cfg.dtype (bf16 by default); normalization and
+softmax statistics accumulate in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype) -> Dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6):
+    """QK-norm over the head_dim axis (qwen3-style), x: [..., head_dim]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary / sinusoidal position encodings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float):
+    """x: [B, S, H, D]; positions: [B, S] (int32)."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # [D/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Additive sinusoidal embedding (musicgen). positions: [B, S]."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # [B, S, half]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP variants
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> Dict:
+    d, dt = cfg.d_model, pdtype(cfg)
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(ks[0], d, d_ff, dt),
+                "w_up": dense_init(ks[1], d, d_ff, dt),
+                "w_down": dense_init(ks[2], d_ff, d, dt)}
+    return {"w_up": dense_init(ks[0], d, d_ff, dt),
+            "w_down": dense_init(ks[1], d_ff, d, dt)}
+
+
+def mlp_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> Dict:
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 2)
+    n_tables = cfg.n_codebooks if cfg.family == "audio" else 1
+    p = {"embedding": (jax.random.normal(ks[0], (n_tables * cfg.vocab_size,
+                                                 cfg.d_model)) * 0.02
+                       ).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(
+            ks[1], cfg.d_model,
+            n_tables * cfg.vocab_size, dt)
+    return p
+
+
+def embed_apply(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray):
+    """tokens: [B, S] (or [B, K, S] audio)."""
+    if cfg.family == "audio":
+        # each codebook has its own vocab slice; sum the K embeddings
+        offsets = (jnp.arange(cfg.n_codebooks) * cfg.vocab_size)[None, :, None]
+        flat = tokens + offsets                       # [B, K, S]
+        emb = jnp.take(params["embedding"], flat, axis=0)  # [B, K, S, d]
+        return emb.sum(axis=1)
+    return jnp.take(params["embedding"], tokens, axis=0)
+
+
+def unembed_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray):
+    if cfg.tie_embeddings:
+        table = params["embedding"]
+        logits = x @ table.T
+    else:
+        logits = x @ params["unembed"]
+    if cfg.family == "audio":
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+        logits = jnp.moveaxis(logits, 2, 1)           # [B, K, S, V]
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean cross-entropy; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# Cost-extraction mode: XLA's HLO cost analysis visits a while-loop body
+# ONCE regardless of trip count, so the dry-run's exact-cost pass fully
+# unrolls inner sequence scans (attention KV blocks, SSD/mLSTM chunks).
+# Numerics are identical; only the lowering changes. The sLSTM per-token
+# recurrence stays scanned (its FLOPs are <0.1% of any cell — documented in
+# EXPERIMENTS.md §Roofline).
+# ---------------------------------------------------------------------------
+
+_UNROLL_INNER = False
+
+
+def set_unroll_inner(value: bool) -> None:
+    global _UNROLL_INNER
+    _UNROLL_INNER = bool(value)
+
+
+def inner_unroll():
+    """Pass as lax.scan's unroll= for inner sequence scans."""
+    return True if _UNROLL_INNER else 1

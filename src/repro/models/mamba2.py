@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) blocks: chunked parallel scan for train/prefill, recurrent
+step for decode. Used standalone and inside the zamba2 hybrid.
+
+State per head: h in R^{P x N} (head_dim x state), per-step decay
+a_t = exp(dt_t * A_h); h_t = a_t h_{t-1} + dt_t x_t (x) B_t; y_t = h_t C_t
++ D_h x_t. The chunked (SSD) form computes intra-chunk contributions with a
+masked quadratic within each chunk and carries h across chunks — the same
+structure as the Pallas kernel in repro.kernels.mamba2_scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (dense_init, inner_unroll, pdtype,
+                                 rmsnorm, rmsnorm_init)
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_init(key, cfg: ModelConfig) -> Dict:
+    d, dt = cfg.d_model, pdtype(cfg)
+    d_in, nh, p, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dt),     # [z | x]
+        "bc_proj": dense_init(ks[1], d, 2 * n, dt),        # [B | C]
+        "dt_proj": dense_init(ks[2], d, nh, dt),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "conv_w": (jax.random.normal(ks[3], (cfg.ssm_conv, d_in + 2 * n))
+                   * 0.1).astype(dt),
+        "ln_out": rmsnorm_init(d_in, dt),
+        "out_proj": dense_init(ks[4], d_in, d, dt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv via shifted adds. x: [B,S,C]; w: [W,C]."""
+    width = w.shape[0]
+    out = x * w[-1]
+    for j in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[width - 1 - j]
+    return out
+
+
+def _project(params, cfg, u):
+    d_in, nh, p, n = _dims(cfg)
+    zx = u @ params["in_proj"]
+    z, x = jnp.split(zx, 2, axis=-1)
+    bc = u @ params["bc_proj"]
+    dt_raw = (u @ params["dt_proj"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + params["dt_bias"])
+    dt = jnp.clip(dt, 1e-4, 10.0)
+    return z, x, bc, dt
+
+
+def mamba_apply(params: Dict, cfg: ModelConfig, u: jnp.ndarray,
+                chunk: int = 256) -> jnp.ndarray:
+    """Full-sequence SSD. u: [B, S, d] -> [B, S, d]."""
+    d_in, nh, p, n = _dims(cfg)
+    b, s, _ = u.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+
+    z, x, bc, dt = _project(params, cfg, u)
+    conv_in = jnp.concatenate([x, bc], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, params["conv_w"]))
+    x, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    xh = x.reshape(b, s, nh, p).astype(jnp.float32)
+    a = -jnp.exp(params["A_log"])                             # [nh]
+    log_a = dt * a[None, None, :]                             # [B,S,nh] (<0)
+    xdt = xh * dt[..., None]                                  # [B,S,nh,P]
+
+    # chunk views
+    xc = xdt.reshape(b, nc, chunk, nh, p)
+    bc_ = bmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cc_ = cmat.reshape(b, nc, chunk, n).astype(jnp.float32)
+    la = jnp.cumsum(log_a.reshape(b, nc, chunk, nh), axis=2)  # [B,nc,Q,nh]
+
+    idx = jnp.arange(chunk)
+    causal = (idx[:, None] >= idx[None, :])                   # [Q, Q]
+
+    def chunk_step(h, inputs):
+        xq, bq, cq, laq = inputs      # [B,Q,nh,P],[B,Q,N],[B,Q,N],[B,Q,nh]
+        # intra-chunk: masked quadratic
+        g = jnp.einsum("bqn,bmn->bqm", cq, bq)                # [B,Q,Q]
+        logdec = laq[:, :, None, :] - laq[:, None, :, :]
+        logdec = jnp.where(causal[None, :, :, None], logdec, -1e30)
+        decay = jnp.exp(logdec)
+        y = jnp.einsum("bqm,bqmh,bmhp->bqhp", g, decay, xq)
+        # inter-chunk: incoming state decayed to each position
+        y = y + jnp.einsum("bqn,bhpn,bqh->bqhp", cq, h, jnp.exp(laq))
+        # state update for the next chunk
+        la_last = laq[:, -1:, :]                              # [B,1,nh]
+        w = jnp.exp(la_last - laq)                            # [B,Q,nh]
+        h_new = jnp.einsum("bh,bhpn->bhpn",
+                           jnp.exp(la_last[:, 0, :]), h) \
+            + jnp.einsum("bqhp,bqn,bqh->bhpn", xq, bq, w)
+        return h_new, y
+
+    h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(bc_, 1, 0),
+         jnp.moveaxis(cc_, 1, 0), jnp.moveaxis(la, 1, 0)),
+        unroll=inner_unroll())
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, nh, p)
+    y = y + xh * params["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(u.dtype)
+    y = rmsnorm(params["ln_out"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"]
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, nh, p, n = _dims(cfg)
+    return {"h": jnp.zeros((batch, nh, p, n), dtype),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_in + 2 * n),
+                              dtype)}
+
+
+def mamba_step(params: Dict, cfg: ModelConfig, u: jnp.ndarray,
+               state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Recurrent decode step. u: [B, 1, d]."""
+    d_in, nh, p, n = _dims(cfg)
+    b = u.shape[0]
+    z, x, bc, dt = _project(params, cfg, u)    # z,x: [B,1,d_in]; dt [B,1,nh]
+    conv_in = jnp.concatenate([x, bc], axis=-1)[:, 0]         # [B, C]
+    window = jnp.concatenate(
+        [state["conv"], conv_in[:, None].astype(state["conv"].dtype)],
+        axis=1)                                               # [B, W, C]
+    w = params["conv_w"]
+    conv = jax.nn.silu(jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                                  w.astype(jnp.float32)))
+    x1, b1, c1 = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    xh = x1.reshape(b, nh, p)
+    dt1 = dt[:, 0]                                            # [B, nh]
+    a = jnp.exp(dt1 * (-jnp.exp(params["A_log"]))[None, :])   # [B, nh]
+    h = state["h"] * a[..., None, None] \
+        + jnp.einsum("bhp,bn,bh->bhpn", xh, b1, dt1)
+    y = jnp.einsum("bhpn,bn->bhp", h, c1) \
+        + xh * params["D"][None, :, None]
+    y = y.reshape(b, 1, d_in).astype(u.dtype)
+    y = rmsnorm(params["ln_out"], y * jax.nn.silu(z), cfg.norm_eps)
+    new_state = {"h": h, "conv": window[:, 1:]}
+    return y @ params["out_proj"], new_state
+
+
+def mamba_ref(params: Dict, cfg: ModelConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Sequential-oracle SSD (for tests): step through time with mamba-step
+    semantics but full-sequence conv."""
+    d_in, nh, p, n = _dims(cfg)
+    b, s, _ = u.shape
+    z, x, bc, dt = _project(params, cfg, u)
+    conv_in = jnp.concatenate([x, bc], axis=-1)
+    conv = jax.nn.silu(_causal_conv(conv_in, params["conv_w"]))
+    x, bmat, cmat = jnp.split(conv, [d_in, d_in + n], axis=-1)
+    xh = x.reshape(b, s, nh, p).astype(jnp.float32)
+    a = jnp.exp(dt * (-jnp.exp(params["A_log"]))[None, None, :])
+
+    def step(h, inp):
+        xt, bt, ct, at, dtt = inp
+        h = h * at[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt, bt, dtt)
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, nh, p, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (
+        jnp.moveaxis(xh, 1, 0), jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(cmat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(a, 1, 0), jnp.moveaxis(dt, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1) + xh * params["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(u.dtype)
+    y = rmsnorm(params["ln_out"], y * jax.nn.silu(z), cfg.norm_eps)
+    return y @ params["out_proj"]

@@ -1,0 +1,141 @@
+"""Dense transformer blocks (self-attention and cross-attention variants).
+
+Block params are single-layer dicts; the model assembler stacks them with a
+leading layer axis for the SR streaming scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (dense_init, mlp_apply, mlp_init, pdtype,
+                                 rmsnorm, rmsnorm_init)
+
+
+def block_init(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    return {"ln_attn": rmsnorm_init(cfg.d_model, pdtype(cfg)),
+            "attn": attn.attn_init(ks[0], cfg),
+            "ln_mlp": rmsnorm_init(cfg.d_model, pdtype(cfg)),
+            "mlp": mlp_init(ks[1], cfg)}
+
+
+def cross_block_init(key, cfg: ModelConfig) -> Dict:
+    """Cross-attention image layer (llama-3.2-vision style): gated."""
+    ks = jax.random.split(key, 4)
+    return {"ln_attn": rmsnorm_init(cfg.d_model, pdtype(cfg)),
+            "attn": attn.attn_init(ks[0], cfg),
+            "attn_gate": jnp.zeros((), dtype=pdtype(cfg)),
+            "ln_mlp": rmsnorm_init(cfg.d_model, pdtype(cfg)),
+            "mlp": mlp_init(ks[1], cfg),
+            "mlp_gate": jnp.zeros((), dtype=pdtype(cfg))}
+
+
+def block_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                positions: jnp.ndarray, *, causal: bool = True,
+                fuse_qkv: bool = True, q_block: int = 512,
+                kv_block: int = 512,
+                return_kv: bool = False, use_pallas: bool = False):
+    """Full-sequence forward (train / prefill). x: [B, S, d]."""
+    h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_project(params["attn"], cfg, h, positions,
+                               fuse_qkv=fuse_qkv)
+    if use_pallas:
+        from repro.kernels.flash_attention.ops import attention as _fa
+        o = _fa(q, k, v, causal=causal,
+                q_block=min(q_block, q.shape[1]),
+                kv_block=min(kv_block, k.shape[1]),
+                logit_softcap=cfg.attn_logit_softcap)
+    else:
+        o = attn.chunked_attention(q, k, v, causal=causal, q_block=q_block,
+                                   kv_block=kv_block,
+                                   logit_softcap=cfg.attn_logit_softcap)
+    b, s, _, _ = o.shape
+    x = x + o.reshape(b, s, cfg.q_dim) @ params["attn"]["wo"]
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    x = x + mlp_apply(params["mlp"], cfg, h)
+    if return_kv:
+        return x, (k, v)
+    return x
+
+
+def block_decode(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                 pos: jnp.ndarray, kv_cache: Tuple[jnp.ndarray, jnp.ndarray],
+                 *, fuse_qkv: bool = True, kv_block: int = 2048):
+    """Single-token decode. x: [B, 1, d]; kv_cache: ([B,Smax,Hkv,D], ...).
+
+    Writes the new KV at ``pos`` then attends over [0, pos]."""
+    k_cache, v_cache = kv_cache
+    h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+    positions = jnp.broadcast_to(pos, (x.shape[0], 1)).astype(jnp.int32)
+    q, k, v = attn.qkv_project(params["attn"], cfg, h, positions,
+                               fuse_qkv=fuse_qkv)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    o = attn.decode_attention(q, k_cache, v_cache, kv_len=pos + 1,
+                              kv_block=kv_block,
+                              logit_softcap=cfg.attn_logit_softcap)
+    x = x + o.reshape(x.shape[0], 1, cfg.q_dim) @ params["attn"]["wo"]
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    x = x + mlp_apply(params["mlp"], cfg, h)
+    return x, (k_cache, v_cache)
+
+
+def block_decode_paged(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                       pos: jnp.ndarray, kv: Dict, *, batch_axes, page_axes,
+                       fuse_qkv: bool = True, kv_block: int = 2048):
+    """Single-token decode against a page-sharded cache.
+
+    kv: {"k","v"} each [B, n_pages, page, Hkv, D] sharded over
+    (batch_axes, page_axes). The attention (and the KV write) run
+    distributed via paged_decode_attention — no cache resharding.
+    """
+    h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+    positions = jnp.broadcast_to(
+        jnp.asarray(pos, jnp.int32).reshape(-1, 1), (x.shape[0], 1))
+    q, k, v = attn.qkv_project(params["attn"], cfg, h, positions,
+                               fuse_qkv=fuse_qkv)
+    o, k_pages, v_pages = attn.paged_decode_attention(
+        q, kv["k"], kv["v"], k, v, pos, batch_axes=batch_axes,
+        page_axes=page_axes, kv_block=kv_block,
+        logit_softcap=cfg.attn_logit_softcap)
+    x = x + o.reshape(x.shape[0], 1, cfg.q_dim) @ params["attn"]["wo"]
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    x = x + mlp_apply(params["mlp"], cfg, h)
+    return x, {"k": k_pages, "v": v_pages}
+
+
+def cross_block_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                      vision_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                      *, q_block: int = 512) -> jnp.ndarray:
+    """Gated cross-attention layer; vision_kv from precomputed embeddings."""
+    k, v = vision_kv
+    h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
+    positions = jnp.zeros(h.shape[:2], jnp.int32)
+    q, _, _ = attn.qkv_project(params["attn"], cfg, h, positions, rope=False)
+    o = attn.chunked_attention(q, k, v, causal=False, q_block=q_block,
+                               kv_block=min(512, k.shape[1]))
+    b, s, _, _ = o.shape
+    gate = jnp.tanh(params["attn_gate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + gate * (o.reshape(b, s, cfg.q_dim) @ params["attn"]["wo"])
+    h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
+    gate = jnp.tanh(params["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + gate * mlp_apply(params["mlp"], cfg, h)
+    return x
+
+
+def vision_kv(params: Dict, cfg: ModelConfig,
+              vision_embeds: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V from (stubbed) vision embeddings."""
+    h = vision_embeds
+    k = (h @ params["attn"]["wk"]).reshape(
+        h.shape[0], h.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ params["attn"]["wv"]).reshape(
+        h.shape[0], h.shape[1], cfg.n_kv_heads, cfg.head_dim)
+    return k, v

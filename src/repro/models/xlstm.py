@@ -1,0 +1,293 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, sequential recurrence), per arXiv:2405.04517.
+
+mLSTM per head: C_t = f_t C_{t-1} + i_t v_t k_t^T, n_t = f_t n_{t-1} + i_t
+k_t, h_t = (C_t q_t) / max(|n_t.q_t|, exp(-m_t)) with exponential gates
+stabilized by m_t. Train/prefill uses a chunkwise form (intra-chunk
+quadratic + inter-chunk state carry, like the SSD scan); decode is the
+recurrent step. Output gating uses the block's silu branch.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (dense_init, inner_unroll, mlp_apply,
+                                 pdtype, rmsnorm, rmsnorm_init)
+
+NEG = -1e30
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.mlstm_expand * cfg.d_model
+    nh = cfg.n_heads
+    return d_in, nh, d_in // nh
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig) -> Dict:
+    d, dt = cfg.d_model, pdtype(cfg)
+    d_in, nh, dh = _dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {"ln": rmsnorm_init(d, dt),
+            "w_up1": dense_init(ks[0], d, d_in, dt),
+            "w_up2": dense_init(ks[1], d, d_in, dt),
+            "conv_w": (jax.random.normal(ks[2], (4, d_in)) * 0.1).astype(dt),
+            "w_qkv": dense_init(ks[3], d_in, 3 * d_in, dt),
+            "w_gates": dense_init(ks[4], d_in, 2 * nh, jnp.float32),
+            "gate_bias": jnp.concatenate(
+                [jnp.zeros((nh,)), 3.0 + jnp.arange(nh) * 0.5]
+            ).astype(jnp.float32),
+            "ln_head": rmsnorm_init(d_in, dt),
+            "w_down2": dense_init(ks[5], d_in, d, dt)}
+
+
+def _causal_conv(x, w):
+    width = w.shape[0]
+    out = x * w[-1]
+    for j in range(1, width):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :-j]
+        out = out + shifted * w[width - 1 - j]
+    return out
+
+
+def _mlstm_qkvg(params, cfg, x):
+    d_in, nh, dh = _dims(cfg)
+    b, s, _ = x.shape
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    u = h @ params["w_up1"]
+    zg = h @ params["w_up2"]
+    c = jax.nn.silu(_causal_conv(u, params["conv_w"]))
+    qkv = c @ params["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    v = u  # value branch takes the pre-conv projection (paper Fig. 10)
+    gates = c.astype(jnp.float32) @ params["w_gates"] + params["gate_bias"]
+    ig, fg = jnp.split(gates, 2, axis=-1)       # [B,S,nh] raw (log-space)
+    fg = jax.nn.log_sigmoid(fg)                 # forget in (0,1), log-space
+    shape = (b, s, nh, dh)
+    return (q.reshape(shape), k.reshape(shape), v.reshape(shape),
+            ig, fg, zg)
+
+
+def mlstm_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                chunk: int = 256) -> jnp.ndarray:
+    """Chunked-parallel mLSTM. x: [B,S,d] -> [B,S,d]."""
+    d_in, nh, dh = _dims(cfg)
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    q, k, v, ig, fg, zg = _mlstm_qkvg(params, cfg, x)
+    scale = 1.0 / (dh ** 0.5)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((b, nc, chunk) + t.shape[2:]), 1, 0)
+
+    qc, kc, vc = map(to_chunks, (q.astype(jnp.float32) * scale,
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))
+    igc, fgc = to_chunks(ig), to_chunks(fg)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+
+    def chunk_step(carry, inp):
+        C, n, m = carry            # [B,nh,dh,dh], [B,nh,dh], [B,nh]
+        qq, kk, vv, ii, ff = inp
+        F = jnp.cumsum(ff, axis=1)                    # [B,Q,nh]
+        # intra-chunk log weights D[t,s] = F[t]-F[s]+i[s]
+        logd = (F[:, :, None, :] - F[:, None, :, :]
+                + ii[:, None, :, :])                  # [B,Q,Q,nh]
+        logd = jnp.where(causal[None, :, :, None], logd, NEG)
+        b_inter = F + m[:, None, :]                   # [B,Q,nh]
+        m_loc = jnp.maximum(logd.max(axis=2), b_inter)
+        m_loc = jax.lax.stop_gradient(m_loc)
+        dmat = jnp.exp(logd - m_loc[:, :, None, :])   # [B,Q,Q,nh]
+        sc = jnp.einsum("bqhd,bshd->bqsh", qq, kk)    # [B,Q,Q,nh]
+        w_inter = jnp.exp(b_inter - m_loc)            # [B,Q,nh]
+        num = jnp.einsum("bqsh,bqsh,bshd->bqhd", sc, dmat, vv) \
+            + jnp.einsum("bqh,bhde,bqhe->bqhd", w_inter, C, qq)
+        den_vec = jnp.einsum("bqsh,bshd->bqhd", dmat, kk)  # sum dmat*k
+        den = jnp.einsum("bqhd,bqhd->bqh", den_vec, qq) \
+            + w_inter * jnp.einsum("bhd,bqhd->bqh", n, qq)
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))
+        hq = num / den[..., None]                     # [B,Q,nh,dh]
+        # state update to chunk end
+        F_last = F[:, -1, :]                          # [B,nh]
+        w_end = jnp.exp(F_last[:, None, :] - F + ii)  # [B,Q,nh]
+        m_new = jnp.maximum(F_last + m,
+                            (F_last[:, None, :] - F + ii).max(axis=1))
+        m_new = jax.lax.stop_gradient(m_new)
+        r = jnp.exp(F_last + m - m_new)               # carry rescale
+        w_end = jnp.exp((F_last[:, None, :] - F + ii)
+                        - m_new[:, None, :])
+        C_new = r[..., None, None] * C \
+            + jnp.einsum("bqh,bqhd,bqhe->bhde", w_end, vv, kk)
+        n_new = r[..., None] * n \
+            + jnp.einsum("bqh,bqhd->bhd", w_end, kk)
+        return (C_new, n_new, m_new), hq
+
+    C0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -1e9, jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, igc, fgc),
+                         unroll=inner_unroll())
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d_in).astype(x.dtype)
+    h = rmsnorm(params["ln_head"], h, cfg.norm_eps)
+    h = h * jax.nn.silu(zg)
+    return x + h @ params["w_down2"]
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    d_in, nh, dh = _dims(cfg)
+    return {"C": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e9, jnp.float32),
+            "conv": jnp.zeros((batch, 3, d_in), jnp.float32)}
+
+
+def mlstm_step(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
+               state: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Recurrent decode step. x: [B,1,d]."""
+    d_in, nh, dh = _dims(cfg)
+    b = x.shape[0]
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    u = (h @ params["w_up1"])[:, 0]
+    zg = (h @ params["w_up2"])[:, 0]
+    window = jnp.concatenate(
+        [state["conv"], u[:, None].astype(jnp.float32)], axis=1)
+    c = jax.nn.silu(jnp.einsum("bwc,wc->bc", window,
+                               params["conv_w"].astype(jnp.float32)))
+    qkv = c.astype(x.dtype) @ params["w_qkv"]
+    q, k, _ = jnp.split(qkv, 3, axis=-1)
+    v = u
+    gates = c @ params["w_gates"] + params["gate_bias"]
+    ig, fg = jnp.split(gates, 2, axis=-1)        # [B, nh]
+    fg = jax.nn.log_sigmoid(fg)
+    q = q.reshape(b, nh, dh).astype(jnp.float32) / (dh ** 0.5)
+    k = k.reshape(b, nh, dh).astype(jnp.float32)
+    v = v.reshape(b, nh, dh).astype(jnp.float32)
+    m_new = jnp.maximum(fg + state["m"], ig)
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(fg + state["m"] - m_new)
+    C = f_s[..., None, None] * state["C"] \
+        + i_s[..., None, None] * jnp.einsum("bhd,bhe->bhde", v, k)
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)),
+                      jnp.exp(-m_new))
+    hq = (num / den[..., None]).reshape(b, 1, d_in).astype(x.dtype)
+    hq = rmsnorm(params["ln_head"], hq, cfg.norm_eps)
+    hq = hq * jax.nn.silu(zg)[:, None]
+    out = x + hq @ params["w_down2"]
+    return out, {"C": C, "n": n, "m": m_new, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig) -> Dict:
+    d, dt = cfg.d_model, pdtype(cfg)
+    nh = cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 5)
+    ff = max(1, int(d * 4 / 3) // 64 * 64)
+    return {"ln": rmsnorm_init(d, dt),
+            "conv_w": (jax.random.normal(ks[0], (4, d)) * 0.1).astype(dt),
+            "w_gates": dense_init(ks[1], d, 4 * d, dt),
+            "r_gates": (jax.random.normal(ks[2], (nh, dh, 4 * dh))
+                        * 0.02).astype(jnp.float32),
+            "gate_bias": jnp.zeros((4 * d,), jnp.float32),
+            "w_out": dense_init(ks[3], d, d, dt),
+            "ln_ff": rmsnorm_init(d, dt),
+            "ffn": {"w_gate": dense_init(ks[4], d, ff, dt),
+                    "w_up": dense_init(jax.random.fold_in(ks[4], 1), d, ff,
+                                       dt),
+                    "w_down": dense_init(jax.random.fold_in(ks[4], 2), ff, d,
+                                         dt)}}
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6,
+            "m": jnp.full((batch, nh, dh), -1e9, jnp.float32),
+            "conv": jnp.zeros((batch, 3, d), jnp.float32)}
+
+
+def _slstm_cell(gates, state, nh, dh):
+    """gates: [B, 4*d] raw; state dict; returns (h, new_state)."""
+    b = gates.shape[0]
+    g = gates.reshape(b, nh, dh, 4)
+    ig, fg, zg, og = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+    m_new = jnp.maximum(fg + state["m"], ig)
+    i_s = jnp.exp(ig - m_new)
+    f_s = jnp.exp(fg + state["m"] - m_new)
+    c = f_s * state["c"] + i_s * jnp.tanh(zg)
+    n = f_s * state["n"] + i_s
+    h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+    return h, {"h": h, "c": c, "n": n, "m": m_new}
+
+
+def slstm_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray):
+    """Sequential sLSTM over the full sequence. x: [B,S,d]."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b, s, _ = x.shape
+    hpre = rmsnorm(params["ln"], x, cfg.norm_eps)
+    c_in = jax.nn.silu(_causal_conv(hpre, params["conv_w"]))
+    wx = (c_in @ params["w_gates"]).astype(jnp.float32) \
+        + params["gate_bias"]                                # [B,S,4d]
+
+    st0 = slstm_state_init(cfg, b)
+    st0.pop("conv")
+
+    def step(st, wxt):
+        rec = jnp.einsum("bhd,hde->bhe", st["h"],
+                         params["r_gates"]).reshape(b, 4 * d)
+        h, st_new = _slstm_cell(wxt + rec, st, nh, dh)
+        return st_new, h
+
+    _, hs = jax.lax.scan(step, st0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    x = x + h @ params["w_out"]
+    h2 = rmsnorm(params["ln_ff"], x, cfg.norm_eps)
+    ff = params["ffn"]
+    y = jax.nn.silu(h2 @ ff["w_gate"]) * (h2 @ ff["w_up"])
+    return x + y @ ff["w_down"]
+
+
+def slstm_step(params: Dict, cfg: ModelConfig, x: jnp.ndarray, state: Dict):
+    """Decode step. x: [B,1,d]."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b = x.shape[0]
+    hpre = rmsnorm(params["ln"], x, cfg.norm_eps)[:, 0]
+    window = jnp.concatenate(
+        [state["conv"], hpre[:, None].astype(jnp.float32)], axis=1)
+    c_in = jax.nn.silu(jnp.einsum("bwc,wc->bc", window,
+                                  params["conv_w"].astype(jnp.float32)))
+    wx = (c_in.astype(x.dtype) @ params["w_gates"]).astype(jnp.float32) \
+        + params["gate_bias"]
+    rec = jnp.einsum("bhd,hde->bhe", state["h"],
+                     params["r_gates"]).reshape(b, 4 * d)
+    h, st_new = _slstm_cell(wx + rec, state, nh, dh)
+    st_new["conv"] = window[:, 1:]
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    x = x + h @ params["w_out"]
+    h2 = rmsnorm(params["ln_ff"], x, cfg.norm_eps)
+    ff = params["ffn"]
+    y = jax.nn.silu(h2 @ ff["w_gate"]) * (h2 @ ff["w_up"])
+    return x + y @ ff["w_down"], st_new

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, init, opt_specs,
+                               schedule, update)
+from repro.optim import compression
+
+__all__ = ["AdamWConfig", "AdamWState", "init", "opt_specs", "schedule",
+           "update", "compression"]

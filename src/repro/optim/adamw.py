@@ -1,0 +1,128 @@
+"""AdamW on sharded pytrees, with tier-aware state placement.
+
+The optimizer state (m, v, fp32 master copy) is the largest write-heavy
+resident in large-model training — the natural occupant of the paper's
+SSD-EP tier. `opt_specs` therefore places m/v/master under the *optimizer
+tier* of the run config (POOL by default, HOST when enabled on TPU); the
+update itself runs sharded (on the reduce-scattered gradient shards: the
+deterministic-store path), so no optimizer-state collective is ever issued.
+
+Hand-written (no optax in this environment) and deliberately minimal:
+pytree in, pytree out, works under jit/shard_map and with ShapeDtypeStructs
+for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # scalar int32
+    m: Any                 # first moment  (fp32, param-shaped tree)
+    v: Any                 # second moment (fp32)
+    master: Any            # fp32 master params (None if params are fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    use_master: bool = True  # keep fp32 master when params are low-precision
+
+
+def init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    m = jax.tree_util.tree_map(zeros32, params)
+    v = jax.tree_util.tree_map(zeros32, params)
+    master = None
+    if cfg.use_master:
+        master = jax.tree_util.tree_map(
+            lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=m, v=v, master=master)
+
+
+def schedule(step: jnp.ndarray, cfg: AdamWConfig) -> jnp.ndarray:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t))
+    return cfg.learning_rate * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any,
+                                                              jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm
+
+
+def update(grads: Any, state: AdamWState, params: Any,
+           cfg: AdamWConfig) -> Tuple[Any, AdamWState, dict]:
+    """One AdamW step. Runs entirely on gradient/param *shards* (DS path).
+
+    Returns (new_params, new_state, metrics).
+    """
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, mp):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        base = mp if mp is not None else p.astype(jnp.float32)
+        new = base - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                           + cfg.weight_decay * base)
+        return new.astype(p.dtype), m2, v2, new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_mp = (treedef.flatten_up_to(state.master)
+               if state.master is not None else [None] * len(flat_p))
+    out = [upd(*t) for t in zip(flat_p, flat_g, flat_m, flat_v, flat_mp)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_master = (treedef.unflatten([o[3] for o in out])
+                  if state.master is not None else None)
+    new_state = AdamWState(step=step, m=new_m, v=new_v, master=new_master)
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_specs(param_specs: Any, state: AdamWState) -> AdamWState:
+    """PartitionSpecs for the optimizer state: m/v/master mirror the param
+    specs (they live in the optimizer tier with identical layout)."""
+    from jax.sharding import PartitionSpec as P
+    mirror = param_specs
+    return AdamWState(step=P(), m=mirror, v=mirror,
+                      master=mirror if state.master is not None else None)

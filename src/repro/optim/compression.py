@@ -1,0 +1,84 @@
+"""Gradient compression for cross-pod reductions: int8 + error feedback.
+
+On the multi-pod mesh the `pod`-axis reduction crosses the slow inter-pod
+links (DCI), so the framework optionally compresses the pod-axis gradient
+contribution to int8 with per-block scales and an error-feedback residual
+carried in the optimizer loop (the residual restores unbiasedness over
+steps). The within-pod (data-axis) reduce-scatter stays full precision —
+it rides the fast ICI and is the deterministic-store path.
+
+Shape contract: works leaf-wise on any pytree; block size divides the
+trailing dim or falls back to per-tensor scaling.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8-quantize with per-block absmax scales. Returns (q, scales)."""
+    x32 = x.astype(jnp.float32)
+    flat = x32.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape,
+                dtype) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_leaf(g: jnp.ndarray, residual: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 round trip for one gradient leaf.
+
+    Returns (decompressed_gradient, new_residual). The caller reduces the
+    *decompressed* value; in a real deployment the int8 payload is what
+    crosses the wire — XLA's all-reduce operates post-dequantize here, which
+    keeps the graph pure while modelling the numerics exactly.
+    """
+    g32 = g.astype(jnp.float32) + residual
+    q, scale = _quantize(g32)
+    deq = _dequantize(q, scale, g.shape, jnp.float32)
+    new_residual = g32 - deq
+    return deq.astype(g.dtype), new_residual
+
+
+def init_residuals(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, residuals: Any) -> Tuple[Any, Any]:
+    """Apply int8-EF compression leaf-wise. Returns (grads', residuals')."""
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [compress_leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+def compressed_bytes(params: Any) -> int:
+    """Wire bytes per step under int8+scales (for the roofline's collective
+    term on the pod axis)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(params):
+        n = leaf.size
+        n_blocks = -(-n // BLOCK)
+        total += n + 4 * n_blocks  # int8 payload + fp32 scale per block
+    return total

@@ -1,0 +1,168 @@
+"""Sharding rules: map param-tree paths -> PartitionSpec for the production mesh.
+
+Axes: optional "pod" (multi-pod), "data" (DP + FSDP pool tier), "model" (TP/EP).
+
+Tier semantics (the paper's HDM map, DESIGN.md §4.1):
+  DEVICE tier  -> replicated over data axis (always resident, like GPU HBM)
+  POOL tier    -> additionally sharded over the data axis (the CXL DRAM-EP
+                  analogue: the "expander" is the rest of the mesh; layers are
+                  gathered on use via speculative read)
+  HOST tier    -> pinned_host memory kind on top of POOL sharding (SSD-EP
+                  analogue; TPU only — gated by RunConfig.enable_host_tier)
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# (regex over param path, spec WITHOUT the leading layer-stack axis)
+# "F" marks the FSDP-shardable axis (replaced by fsdp axis for POOL tier,
+# None for DEVICE tier). "M" is the tensor-parallel axis.
+_RULES = [
+    # embeddings
+    (r"embedding$",            ("M", "F")),
+    (r"unembed$",              ("F", "M")),
+    # attention
+    (r"\bwq$|\bwk$|\bwv$",     ("F", "M")),
+    (r"\bwo$",                 ("M", "F")),
+    (r"q_norm$|k_norm$",       (None,)),
+    # dense mlp
+    (r"w_gate$|w_up$",         ("F", "M")),
+    (r"w_down$",               ("M", "F")),
+    # moe
+    (r"router$",               ("F", None)),
+    (r"e_gate$|e_up$",         ("M", "F", None)),
+    (r"e_down$",               ("M", None, "F")),
+    # mamba2
+    (r"in_proj$",              ("F", "M")),
+    (r"out_proj$",             ("M", "F")),
+    (r"conv_w$",               (None, "M")),
+    (r"A_log$|\bD$|dt_bias$",  ("M",)),
+    # xlstm (mLSTM / sLSTM)
+    (r"w_up1$|w_up2$|w_qkv$|w_gates$",  ("F", "M")),
+    (r"w_down2$|w_out$",       ("M", "F")),
+    (r"r_gates$",              ("M", None, None)),
+    # vlm cross-attention follows attention rules (same names)
+    # norms / scalars / gates
+    (r"scale$|bias$|gate$",    (None,)),
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                    for k in path)
+
+
+# production mesh axis sizes — the divisibility guard below drops a mesh
+# axis from a dim it does not divide (e.g. granite's vocab 49155 % 16 != 0,
+# xlstm's 2*nh gate dim). Guarding against the production sizes keeps the
+# specs identical between smoke (1x1) and production (16x16 / 2x16x16)
+# meshes.
+AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+def _divisible(axes, dim: int) -> bool:
+    if axes is None:
+        return True
+    group = axes if isinstance(axes, tuple) else (axes,)
+    n = 1
+    for a in group:
+        n *= AXIS_SIZES.get(a, 1)
+    return dim % n == 0
+
+
+def spec_for(path_str: str, shape, *, fsdp_axis, stacked: bool) -> P:
+    """Resolve the PartitionSpec for one param leaf."""
+    ndim = len(shape)
+    for pat, spec in _RULES:
+        if re.search(pat, path_str):
+            out = []
+            for s in spec:
+                if s == "F":
+                    out.append(fsdp_axis)
+                elif s == "M":
+                    out.append("model")
+                else:
+                    out.append(None)
+            # normalize to actual rank (norm scales etc. may be rank-1)
+            base = len(out)
+            eff_ndim = ndim - (1 if stacked else 0)
+            if eff_ndim < base:
+                out = out[-eff_ndim:] if eff_ndim > 0 else []
+            elif eff_ndim > base:
+                out = [None] * (eff_ndim - base) + out
+            if stacked:
+                out = [None] + out
+            out = [a if _divisible(a, shape[i]) else None
+                   for i, a in enumerate(out)]
+            return P(*out)
+    # default: replicate
+    return P(*([None] * ndim))
+
+
+def param_specs(params_shape: Any, *, tier: str = "pool",
+                multi_pod_fsdp: bool = False, stacked_prefixes=("blocks",
+                                                                "groups")):
+    """PartitionSpecs for a (possibly eval_shape'd) param tree.
+
+    tier: "device" => no FSDP axis (replicated over data);
+          "pool"/"host" => FSDP-shard over data (pool = DRAM EP analogue).
+    """
+    fsdp_axis = None
+    if tier in ("pool", "host"):
+        fsdp_axis = ("pod", "data") if multi_pod_fsdp else "data"
+
+    def f(path, leaf):
+        ps = _path_str(path)
+        stacked = any(ps.startswith(p) or f"/{p}" in ps
+                      for p in stacked_prefixes)
+        return spec_for(ps, leaf.shape, fsdp_axis=fsdp_axis,
+                        stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def gathered_specs(specs: Any, *, fsdp_axes=("data", "pod")) -> Any:
+    """Specs with the FSDP axis removed — the materialized (gathered) form
+    used inside the layer body after a speculative-read gather."""
+    def strip(spec: P) -> P:
+        out = []
+        for s in spec:
+            if s in fsdp_axes:
+                out.append(None)
+            elif isinstance(s, tuple):
+                kept = tuple(a for a in s if a not in fsdp_axes)
+                out.append(kept if kept else None)
+            else:
+                out.append(s)
+        return P(*out)
+    return jax.tree_util.tree_map(
+        strip, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(mesh_axes, seq_shard: bool = False) -> P:
+    dp = ("pod", "data") if "pod" in mesh_axes else "data"
+    return P(dp, "model" if seq_shard else None)
+
+
+def shardings_from_specs(mesh: Mesh, specs: Any, memory_kind: Optional[str]
+                         = None) -> Any:
+    def mk(spec):
+        if memory_kind is not None:
+            return NamedSharding(mesh, spec, memory_kind=memory_kind)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map(mk, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(tree: Any, specs: Any) -> Any:
+    """with_sharding_constraint over a pytree of PartitionSpecs."""
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s)
+        if hasattr(x, "shape") else x,
+        tree, specs)

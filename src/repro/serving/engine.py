@@ -1,0 +1,241 @@
+"""Continuous-batching serving engine over the paged, tiered KV cache.
+
+The paper's storage-expansion loop, at request granularity:
+
+ * slots — the engine runs a fixed decode batch; requests stream through
+   slots (continuous batching). Each slot owns a page range of the
+   distributed cache and its own position (per-slot `pos` vector).
+ * tiered pages — a finished slot's pages are not dropped: they retire
+   through the ``StagingRing`` (deterministic store: the release is
+   immediate; the flush to the cold tier happens in the background, gated
+   by the QoS controller exactly like Fig. 8) into the host-side page
+   store, keyed by request id — prefix reuse fetches them back (the
+   speculative-read path) instead of re-prefilling.
+ * QoS — per-step telemetry drives the same DevLoad machine the training
+   driver and the simulator use; under congestion flushes pause and the
+   prefetch window narrows.
+
+The decode step itself is models.model.decode_step — the page-sharded
+distributed attention with owner-rank writes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import deterministic_store as ds
+from repro.core.qos import DevLoad, QoSController
+from repro.models import model as M
+from repro.parallel import sharding as shlib
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    slot: Optional[int] = None
+
+
+class HostPageStore:
+    """Cold tier for retired KV pages (the SSD-EP analogue)."""
+
+    def __init__(self):
+        self.pages: Dict[int, Dict] = {}
+        self.bytes = 0
+
+    def put(self, rid: int, kv_slot) -> None:
+        host = jax.tree_util.tree_map(np.asarray, kv_slot)
+        self.pages[rid] = host
+        self.bytes += sum(a.nbytes for a in jax.tree_util.tree_leaves(host))
+
+    def get(self, rid: int):
+        return self.pages.get(rid)
+
+
+class ServingEngine:
+    """Fixed-batch continuous batching with tiered page lifecycle."""
+
+    def __init__(self, params, cfg: ModelConfig, rc: RunConfig, *,
+                 n_slots: int = 4, max_seq: int = 512,
+                 temperature: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.rc = rc
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.pspecs = shlib.param_specs(
+            jax.eval_shape(lambda: params), tier=rc.param_tier,
+            multi_pod_fsdp=rc.mesh.multi_pod)
+        self.cache = M.cache_init(cfg, rc, n_slots, max_seq=max_seq)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.qos = QoSController()
+        self.store = HostPageStore()
+        self.flusher = ds.StagingFlusher(
+            sink=lambda rid, kv: self.store.put(rid, kv), qos=self.qos)
+        self.step_fn = jax.jit(self._step)
+        self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
+                      "flushes": 0}
+
+    # ----------------------------------------------------------- step fn
+    def _step(self, params, cache, tokens):
+        return M.decode_step(params, self.cfg, self.rc, tokens, cache,
+                             self.pspecs)
+
+    # ------------------------------------------------------------ admit
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _batch_axes(self):
+        """Locate each cache leaf's batch axis (differencing two shapes)."""
+        if not hasattr(self, "_baxes"):
+            a = M.cache_init(self.cfg, self.rc, 2, max_seq=self.max_seq,
+                             as_shape=True)
+            b = M.cache_init(self.cfg, self.rc, 3, max_seq=self.max_seq,
+                             as_shape=True)
+            self._baxes = jax.tree_util.tree_map(
+                lambda x, y: next(i for i, (p, q) in
+                                  enumerate(zip(x.shape, y.shape))
+                                  if p != q), a, b)
+        return self._baxes
+
+    def _prefill_slot(self, req: Request, slot: int) -> None:
+        """Isolated single-slot prefill, then splice into the batch cache.
+
+        Other slots never observe the prefill (continuous-batching
+        isolation); the final prefill logits seed the first sampled token.
+        """
+        mini = M.cache_init(self.cfg, self.rc, 1, max_seq=self.max_seq)
+        logits = None
+        for t in req.prompt:
+            tok = (jnp.full((1, self.cfg.n_codebooks, 1), t, jnp.int32)
+                   if self.cfg.family == "audio"
+                   else jnp.full((1, 1), t, jnp.int32))
+            logits, mini = self.step_fn(self.params, mini, tok)
+            self.stats["prefill_tokens"] += 1
+
+        def splice(dst, src, axis):
+            idx = [slice(None)] * dst.ndim
+            idx[axis] = slot
+            src_idx = [slice(None)] * src.ndim
+            src_idx[axis] = 0
+            return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(
+                dst.dtype))
+
+        self.cache = jax.tree_util.tree_map(splice, self.cache, mini,
+                                            self._batch_axes())
+        if logits is not None:
+            row = np.asarray(logits.astype(jnp.float32)).reshape(
+                -1, logits.shape[-1])[-1]
+            req.generated.append(int(row.argmax()))
+            self.stats["decode_tokens"] += 1
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            req.slot = slot
+            self.slots[slot] = req
+            self._prefill_slot(req, slot)
+
+    # ----------------------------------------------------------- advance
+    def _advance(self) -> Dict[int, int]:
+        """One decode step for every active slot; returns sampled tokens."""
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        if self.cfg.family == "audio":
+            toks = np.zeros((self.n_slots, self.cfg.n_codebooks, 1),
+                            np.int32)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            last = req.generated[-1] if req.generated else 0
+            if self.cfg.family == "audio":
+                toks[slot, :, 0] = last
+            else:
+                toks[slot, 0] = last
+        t0 = time.time()
+        logits, self.cache = self.step_fn(self.params, self.cache,
+                                          jnp.asarray(toks))
+        logits.block_until_ready()
+        self.stats["steps"] += 1
+        out: Dict[int, int] = {}
+        lg = np.asarray(logits.astype(jnp.float32))
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            row = lg[slot, -1] if lg.ndim == 3 else lg[slot, 0, -1]
+            if self.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                row = row / self.temperature
+                p = np.exp(row - row.max())
+                p /= p.sum()
+                tok = int(np.random.default_rng(
+                    int(jax.random.randint(sub, (), 0, 2**31 - 1))
+                ).choice(len(p), p=p))
+            else:
+                tok = int(row.argmax())
+            out[slot] = tok
+        return out
+
+    # -------------------------------------------------------------- run
+    def _retire(self, slot: int) -> None:
+        """Deterministic store: release the slot immediately; its pages
+        flush to the host tier in the background."""
+        req = self.slots[slot]
+        req.done = True
+        kv_slot = jax.tree_util.tree_map(
+            lambda a: a[:, slot] if a.ndim > 1 else a[slot],
+            self.cache["kv"]) if "kv" in self.cache else None
+        if kv_slot is not None:
+            self.flusher.stage(req.rid, kv_slot)
+        self.finished.append(req)
+        self.slots[slot] = None
+
+    def _check_done(self, slot: int) -> None:
+        req = self.slots[slot]
+        pos = int(np.asarray(self.cache["pos"])[slot])
+        if (len(req.generated) >= req.max_new_tokens
+                or pos >= self.max_seq - 1):
+            self._retire(slot)
+
+    def step(self) -> None:
+        """One engine tick: admit, decode, retire, background-flush."""
+        self._admit()
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None:
+                self._check_done(slot)     # prefill may already satisfy
+        if not any(s is not None for s in self.slots):
+            return
+        sampled = self._advance()
+        for slot, tok in sampled.items():
+            req = self.slots[slot]
+            req.generated.append(tok)
+            self.stats["decode_tokens"] += 1
+            self._check_done(slot)
+        # QoS: occupancy = queue pressure; flushes gated by DevLoad
+        occ = len(self.flusher.pending) / max(self.n_slots * 2, 1)
+        dl = self.qos.classify(occupancy=min(occ, 1.0), service_ratio=1.0)
+        self.qos.update(dl)
+        self.stats["flushes"] += self.flusher.maybe_flush()
+
+    def run(self, max_ticks: int = 1000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        self.flusher.maybe_flush()
+        return self.finished

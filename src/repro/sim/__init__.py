@@ -1,0 +1,8 @@
+from repro.sim.engine import RunResult, run, slowdown_vs_ideal
+from repro.sim.media import DRAM, MEDIA, NAND, OPTANE, ZNAND, Endpoint
+from repro.sim.controller import RootPortController
+from repro.sim import workloads
+
+__all__ = ["RunResult", "run", "slowdown_vs_ideal", "DRAM", "MEDIA",
+           "NAND", "OPTANE", "ZNAND", "Endpoint", "RootPortController",
+           "workloads"]

@@ -1,0 +1,199 @@
+"""The paper's mechanisms as JAX modules: SR, DS, QoS invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import deterministic_store as ds
+from repro.core import speculative_read as sr
+from repro.core.qos import (DevLoad, QoSController, SR_GRANULARITIES,
+                            address_window, SR_OFFSET_UNIT)
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# speculative read
+# ---------------------------------------------------------------------------
+
+
+def _stacked_linear(key, n_layers, d):
+    w = jax.random.normal(key, (n_layers, d, d)) * (0.5 / np.sqrt(d))
+    return {"w": w}
+
+
+@pytest.mark.parametrize("depth,granularity,mode", [
+    (0, 1, "train"), (1, 1, "train"), (2, 1, "train"), (1, 2, "train"),
+    (0, 1, "infer"), (1, 1, "infer"), (2, 1, "infer"), (2, 2, "infer"),
+])
+def test_stream_layers_matches_direct_loop(mesh_ctx, depth, granularity,
+                                           mode):
+    """SR pipelining must be a pure schedule change: same numerics as the
+    direct layer loop at every depth/granularity."""
+    n_layers, d = 5, 8
+    params = _stacked_linear(jax.random.PRNGKey(0), n_layers, d)
+    specs = {"w": P(None, None, None)}
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (3, d))
+
+    def body(x, layer, extra):
+        del extra
+        return jnp.tanh(x @ layer["w"]), None
+
+    out, _ = sr.stream_layers(body, x0, params, specs, n_layers=n_layers,
+                              prefetch_depth=depth, granularity=granularity,
+                              mode=mode, remat=False)
+    ref = x0
+    for i in range(n_layers):
+        ref = jnp.tanh(ref @ params["w"][i])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6, rtol=1e-6)
+
+
+def test_stream_layers_grad_matches(mesh_ctx):
+    """Remat'd SR training path: gradients equal the direct loop's."""
+    n_layers, d = 4, 6
+    params = _stacked_linear(jax.random.PRNGKey(0), n_layers, d)
+    specs = {"w": P(None, None, None)}
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (2, d))
+
+    def body(x, layer, extra):
+        return jnp.tanh(x @ layer["w"]), None
+
+    def loss_stream(p):
+        out, _ = sr.stream_layers(body, x0, p, specs, n_layers=n_layers,
+                                  prefetch_depth=1, mode="train", remat=True)
+        return jnp.sum(out ** 2)
+
+    def loss_direct(p):
+        x = x0
+        for i in range(n_layers):
+            x = jnp.tanh(x @ p["w"][i])
+        return jnp.sum(x ** 2)
+
+    g1 = jax.grad(loss_stream)(params)
+    g2 = jax.grad(loss_direct)(params)
+    np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g2["w"]),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# deterministic store: staging ring
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.floats(-10, 10)),
+                min_size=1, max_size=40))
+@settings(max_examples=30, deadline=None)
+def test_ring_latest_write_wins(writes):
+    """read_through returns the MOST RECENT staged value for a key, else
+    the backing value — the paper's staging-index read path."""
+    item = jnp.zeros((2,))
+    state = ds.ring_init(8, {"x": item})
+    last = {}
+    for key, val in writes:
+        state = ds.ring_write(state, jnp.int32(key),
+                              {"x": jnp.full((2,), val)})
+        last[key] = val
+    n_slots = 8
+    recent = {}
+    for key, val in writes[-n_slots:]:
+        recent[key] = val
+    for key in range(8):
+        backing = {"x": jnp.full((2,), -99.0)}
+        got = ds.read_through(state, jnp.int32(key), backing)
+        # a key overwritten within the ring window returns its latest value
+        if key in recent and last[key] == recent[key]:
+            np.testing.assert_allclose(np.asarray(got["x"]),
+                                       recent[key], atol=1e-6)
+
+
+@given(st.integers(1, 64))
+@settings(max_examples=20, deadline=None)
+def test_ring_occupancy_bounded(n_writes):
+    state = ds.ring_init(8, {"x": jnp.zeros(())})
+    for i in range(n_writes):
+        state = ds.ring_write(state, jnp.int32(i), {"x": jnp.float32(i)})
+    occ = float(ds.ring_occupancy(state))
+    assert 0.0 < occ <= 1.0
+    assert occ == min(n_writes, 8) / 8
+
+
+def test_flusher_respects_qos():
+    qos = QoSController()
+    sunk = []
+    fl = ds.StagingFlusher(sink=lambda k, v: sunk.append(k), qos=qos)
+    fl.stage(1, "a")
+    qos.update(DevLoad.MODERATE)        # congestion: divert, no flush
+    assert fl.maybe_flush() == 0 and not sunk
+    qos.update(DevLoad.LIGHT)           # recovered: drain
+    assert fl.maybe_flush() == 1 and sunk == [1]
+
+
+def test_ds_grad_specs_toggle():
+    specs = {"w": P("data", "model")}
+    assert ds.ds_grad_specs(specs, True) == specs          # reduce-scatter
+    gathered = ds.ds_grad_specs(specs, False)
+    assert gathered["w"] == P(None, "model")               # all-reduce
+
+
+# ---------------------------------------------------------------------------
+# QoS / DevLoad state machine (paper's control table)
+# ---------------------------------------------------------------------------
+
+
+def test_qos_granularity_ladder():
+    q = QoSController(granularity=512)
+    q.update(DevLoad.LIGHT)
+    assert q.granularity == 768 and q.sr_enabled and q.flush_enabled
+    q.update(DevLoad.LIGHT)
+    assert q.granularity == 1024
+    q.update(DevLoad.LIGHT)
+    assert q.granularity == 1024          # clamped at the top
+    q.update(DevLoad.MODERATE)
+    assert q.granularity == 768 and not q.flush_enabled
+    q.update(DevLoad.SEVERE)
+    assert q.sr_halted and q.granularity == SR_GRANULARITIES[0]
+    q.update(DevLoad.LIGHT)               # paper: resume on light load
+    assert q.sr_enabled and q.flush_enabled
+
+
+@given(st.lists(st.sampled_from(list(DevLoad)), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_qos_invariants(seq):
+    q = QoSController()
+    for dl in seq:
+        q.update(dl)
+        assert q.granularity in SR_GRANULARITIES
+        assert 0 <= q.prefetch_depth <= q.max_prefetch_depth
+        if dl == DevLoad.SEVERE:
+            assert q.sr_halted and not q.flush_enabled
+        if dl == DevLoad.LIGHT:
+            assert not q.sr_halted and q.flush_enabled
+
+
+# ---------------------------------------------------------------------------
+# address window (paper Fig. 7)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1 << 20), st.sampled_from(SR_GRANULARITIES),
+       st.lists(st.integers(0, 1 << 20), max_size=32),
+       st.lists(st.integers(0, 1 << 20), max_size=32))
+@settings(max_examples=100, deadline=None)
+def test_address_window_properties(addr, g, mem_q, sr_q):
+    start, end = address_window(addr, g, mem_q, sr_q)
+    assert start >= 0
+    assert end > start
+    assert start % SR_OFFSET_UNIT == 0
+    assert end - start <= max(g, SR_OFFSET_UNIT)
+
+
+def test_address_window_shifts():
+    # past requests (memory queue) push the start forward; future SRs
+    # (SR queue) pull the end back — the paper's queue-derived window
+    a, g = 4096, 1024
+    s0, e0 = address_window(a, g, [], [])
+    s1, e1 = address_window(a, g, [0] * 8, [])
+    s2, e2 = address_window(a, g, [], [0] * 8)
+    assert s1 >= s0
+    assert e2 <= e1

@@ -1,0 +1,107 @@
+"""Per-kernel allclose vs the pure-jnp oracles, sweeping shapes/dtypes.
+
+All kernels run under interpret=True on CPU (the kernel body is executed
+in Python) — the same code path that compiles to Mosaic on the TPU target.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.decode_attention.ops import decode
+from repro.kernels.decode_attention.ref import paged_flash_decode_ref
+from repro.kernels.mamba2_scan.ops import ssd
+from repro.kernels.mamba2_scan.ref import ssd_scan_ref
+from repro.kernels.hdm_stream.ops import stream_matmul
+from repro.kernels.hdm_stream.ref import paged_matmul_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,Hkv,D,qb,kb,causal", [
+    (1, 64, 4, 4, 16, 32, 32, True),      # MHA
+    (2, 128, 8, 2, 32, 64, 32, True),     # GQA, uneven blocks
+    (1, 96, 4, 1, 16, 32, 32, False),     # MQA, full attention
+    (2, 64, 8, 4, 64, 64, 64, True),      # single q block
+])
+def test_flash_attention(dtype, B, S, H, Hkv, D, qb, kb, causal):
+    q = jax.random.normal(KEY, (B, S, H, D), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, Hkv, D), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, Hkv, D), dtype)
+    out = attention(q, k, v, causal=causal, q_block=qb, kv_block=kb)
+    g = H // Hkv
+    qr = jnp.moveaxis(q.reshape(B, S, Hkv, g, D), 1, 3)
+    ref = flash_attention_ref(qr, jnp.moveaxis(k, 1, 2),
+                              jnp.moveaxis(v, 1, 2), causal=causal)
+    ref = jnp.moveaxis(ref, 3, 1).reshape(B, S, H, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,D,P,page,kv_len", [
+    (1, 4, 4, 16, 2, 8, 5),
+    (2, 8, 2, 32, 4, 16, 33),
+    (2, 4, 1, 64, 3, 8, 24),              # full cache
+])
+def test_paged_flash_decode(dtype, B, H, Hkv, D, P, page, kv_len):
+    q = jax.random.normal(KEY, (B, 1, H, D), dtype)
+    kp = jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (B, P, page, Hkv, D), dtype)
+    vp = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (B, P, page, Hkv, D), dtype)
+    out = decode(q, kp, vp, jnp.int32(kv_len))
+    g = H // Hkv
+    ref = paged_flash_decode_ref(
+        q.reshape(B, Hkv, g, D), jnp.moveaxis(kp, 3, 1),
+        jnp.moveaxis(vp, 3, 1), kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32).reshape(B, Hkv, g, D),
+        np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 32, 2, 8, 16, 16),
+    (2, 64, 3, 8, 16, 32),
+    (1, 64, 1, 16, 8, 64),                # single chunk
+])
+def test_ssd_scan(B, S, H, P, N, chunk):
+    xdt = jax.random.normal(KEY, (B, S, H, P))
+    bm = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, N)) * 0.5
+    cm = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, N)) * 0.5
+    la = -jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 3),
+                                    (B, S, H))) * 0.1
+    y = ssd(xdt, bm, cm, la, chunk=chunk)
+    c = S // chunk
+    lac = jnp.moveaxis(jnp.cumsum(la.reshape(B, c, chunk, H), axis=2), 3, 1)
+    ref = ssd_scan_ref(jnp.moveaxis(xdt.reshape(B, c, chunk, H, P), 3, 1),
+                       bm.reshape(B, c, chunk, N),
+                       cm.reshape(B, c, chunk, N), lac)
+    ref = jnp.moveaxis(ref, 1, 3).reshape(B, S, H, P)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("M,K,N,page_k,n_pages,bm,bn", [
+    (32, 64, 64, 16, 8, 32, 32),
+    (64, 128, 96, 32, 4, 32, 48),
+])
+def test_hdm_stream_matmul(dtype, M, K, N, page_k, n_pages, bm, bn):
+    x = jax.random.normal(KEY, (M, K), dtype)
+    wp = jax.random.normal(jax.random.fold_in(KEY, 1),
+                           (n_pages, page_k, N), dtype)
+    rng = np.random.default_rng(0)
+    pids = jnp.asarray(rng.permutation(n_pages)[:K // page_k], jnp.int32)
+    y = stream_matmul(x, wp, pids, block_m=bm, block_n=bn)
+    ref = paged_matmul_ref(x, wp, pids)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))

@@ -1,0 +1,110 @@
+"""Simulator validation: the paper's orderings must hold structurally.
+
+Exact magnitudes are calibration (see EXPERIMENTS.md §Paper-validation);
+these tests pin the DIRECTIONS the paper's Figure 9 reports, so a
+regression in the controller/media models fails loudly.
+"""
+import pytest
+
+from repro.sim import run, workloads
+
+N = 6000  # small traces keep the suite fast; directions are stable
+
+
+@pytest.fixture(scope="module")
+def cache():
+    return {}
+
+
+def _run(cache, *a, **kw):
+    key = (a, tuple(sorted(kw.items())))
+    if key not in cache:
+        cache[key] = run(*a, n_ops=N, **kw)
+    return cache[key]
+
+
+def test_uvm_much_slower_than_ideal(cache):
+    base = _run(cache, "gpu-dram", "vadd", "dram").exec_ns
+    uvm = _run(cache, "uvm", "vadd", "dram").exec_ns
+    assert uvm > 10 * base
+
+
+def test_cxl_close_to_ideal_on_dram(cache):
+    """Fig 9a: CXL within tens of percent of GPU-DRAM."""
+    for w in ("rsum", "vadd", "bfs"):
+        base = _run(cache, "gpu-dram", w, "dram").exec_ns
+        cxl = _run(cache, "cxl", w, "dram").exec_ns
+        assert cxl < 2.0 * base, w
+        assert cxl > 0.95 * base, w
+
+
+def test_cxl_beats_uvm_everywhere(cache):
+    for w in workloads.TABLE_1B:
+        uvm = _run(cache, "uvm", w, "dram").exec_ns
+        cxl = _run(cache, "cxl", w, "dram").exec_ns
+        assert cxl < uvm, w
+
+
+def test_sr_improves_ssd_reads(cache):
+    """Fig 9b: SR a multiple faster than plain CXL on Z-NAND."""
+    for w in ("vadd", "gemm", "sort"):
+        cxl = _run(cache, "cxl", w, "znand").exec_ns
+        sr = _run(cache, "cxl-sr", w, "znand").exec_ns
+        assert sr < 0.7 * cxl, w
+
+
+def test_sr_ablation_ladder(cache):
+    """Fig 9d: hit rate rises NAIVE -> DYN on sequential workloads."""
+    base = _run(cache, "cxl", "vadd", "znand")
+    naive = _run(cache, "cxl-naive", "vadd", "znand")
+    dyn = _run(cache, "cxl-dyn", "vadd", "znand")
+    assert naive.ep_hit_rate > base.ep_hit_rate
+    assert dyn.exec_ns <= naive.exec_ns * 1.05
+    assert dyn.sr["bytes"] > naive.sr["bytes"]   # bigger MemSpecRd windows
+
+
+def test_ds_helps_store_intensive(cache):
+    """Fig 9b/9e: DS hides write/GC tails on store-heavy workloads."""
+    for w in ("bfs", "gauss"):
+        sr = _run(cache, "cxl-sr", w, "znand").exec_ns
+        dsr = _run(cache, "cxl-ds", w, "znand").exec_ns
+        assert dsr < 1.05 * sr, w
+    bfs_sr = _run(cache, "cxl-sr", "bfs", "nand").exec_ns
+    bfs_ds = _run(cache, "cxl-ds", "bfs", "nand").exec_ns
+    assert bfs_ds < bfs_sr
+
+
+def test_media_ordering(cache):
+    """Slower media -> slower CXL baseline (Optane < Z-NAND < NAND)."""
+    times = [
+        _run(cache, "cxl", "vadd", m).exec_ns
+        for m in ("dram", "optane", "znand", "nand")]
+    assert times == sorted(times)
+
+
+def test_ds_never_blocks_stores_under_gc(cache):
+    r = _run(cache, "cxl-ds", "bfs", "znand")
+    assert r.ds["fire_and_forget"] + r.ds["diverted"] > 0
+    # diverted stores eventually flush (none lost)
+    assert r.ds["flushed"] <= r.ds["diverted"]
+
+
+def test_trace_determinism():
+    t1 = workloads.generate("gnn", 2000, seed=3)
+    t2 = workloads.generate("gnn", 2000, seed=3)
+    assert (t1 == t2).all()
+    t3 = workloads.generate("gnn", 2000, seed=4)
+    assert not (t1["addr"] == t3["addr"]).all()
+
+
+def test_table_1b_ratios():
+    """Trace generator honours Table 1b's compute/load ratios."""
+    import numpy as np
+    for name in ("gemm", "bfs", "rsum"):
+        spec = workloads.TABLE_1B[name]
+        tr = workloads.generate(name, 50_000)
+        kinds = tr["kind"]
+        comp = float((kinds == 0).mean())
+        loads = float((kinds == 1).sum()) / max((kinds > 0).sum(), 1)
+        assert abs(comp - spec.compute_ratio) < 0.02, name
+        assert abs(loads - spec.load_ratio) < 0.02, name
