@@ -3,6 +3,10 @@
 Each function regenerates one figure's numbers and prints them next to
 the paper's reported values. The returned dicts feed EXPERIMENTS.md
 §Paper-validation.
+
+Runs on the vectorized sweep engine (repro.sim.vector) by default — set
+REPRO_SIM_ENGINE=scalar to replay on the scalar reference oracle instead
+(the two agree within 1%; see benchmarks/sweep.py).
 """
 from __future__ import annotations
 
@@ -11,9 +15,12 @@ from typing import Dict
 
 import numpy as np
 
-from repro.sim import run
+from repro.sim import run_vectorized
+from repro.sim.engine import run as run_scalar
 from repro.sim.workloads import ORDER, TABLE_1B
 
+run = (run_scalar if os.environ.get("REPRO_SIM_ENGINE") == "scalar"
+       else run_vectorized)
 N_OPS = int(os.environ.get("REPRO_SIM_OPS", "12000"))
 CATS = {"compute": ["rsum", "stencil", "sort"],
         "load": ["gemm", "vadd", "saxpy", "conv3", "path"],

@@ -1,0 +1,96 @@
+"""CXL scenario-sweep benchmark — produces the BENCH_sim.json artifact.
+
+Replays a declarative scenario matrix (config x workload x media x GPU
+queue shape) on the vectorized engine, verifies it against the scalar
+reference oracle, and writes a perf/accuracy artifact:
+
+  PYTHONPATH=src python benchmarks/sweep.py --smoke --out BENCH_sim.json
+  PYTHONPATH=src python benchmarks/sweep.py --set fig9 --ops 12000
+
+Sets:
+  smoke  — small CI matrix covering all 8 configs, 4 media classes, a
+           scaled media bin and a narrow queue shape (~30 scenarios)
+  fig9   — the paper's Figure-9 evaluation set (~100 scenarios)
+  full   — fig9 plus the MLP/store-queue-depth axis
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.sim import sweep as sw  # noqa: E402
+from repro.sim.workloads import ORDER  # noqa: E402
+
+
+def build_matrix(name: str, n_ops: int):
+    if name == "smoke":
+        return sw.smoke_matrix(n_ops)
+    if name == "fig9":
+        return sw.fig9_matrix(n_ops)
+    if name == "full":
+        m = sw.fig9_matrix(n_ops)
+        m += sw.matrix(("cxl-sr", "cxl-ds"), ("vadd", "bfs"), ("znand",),
+                       n_ops=n_ops, mlps=(16, 64), store_qs=(4, 16))
+        m += sw.matrix(("gds",), ORDER, ("znand", "nand"), n_ops=n_ops)
+        return list(dict.fromkeys(m))
+    raise SystemExit(f"unknown scenario set: {name}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--set", default="fig9",
+                    choices=("smoke", "fig9", "full"),
+                    help="scenario matrix to replay")
+    ap.add_argument("--smoke", action="store_true",
+                    help="alias for --set smoke --ops 4000")
+    ap.add_argument("--ops", type=int, default=None,
+                    help="ops per trace (default 12000; smoke 4000)")
+    ap.add_argument("--out", default="BENCH_sim.json")
+    ap.add_argument("--no-compare", action="store_true",
+                    help="skip the scalar-oracle replay (perf only)")
+    ap.add_argument("--equivalence-sample", type=int, default=None,
+                    help="verify only the first N scenarios vs the oracle")
+    args = ap.parse_args()
+
+    set_name = "smoke" if args.smoke else args.set
+    n_ops = args.ops or (4000 if set_name == "smoke" else 12000)
+    scenarios = build_matrix(set_name, n_ops)
+    print(f"[sweep] set={set_name} scenarios={len(scenarios)} "
+          f"n_ops={n_ops}")
+
+    payload = sw.bench(scenarios, compare=not args.no_compare,
+                       equivalence_sample=args.equivalence_sample)
+    payload["matrix"]["set"] = set_name
+    payload["matrix"]["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                                   time.gmtime())
+
+    perf, acc = payload["perf"], payload["accuracy"]
+    print(f"[sweep] vector: {perf['vector_s']}s"
+          + (f"  fanout({perf['fanout_workers']}): "
+             f"{perf['vector_fanout_s']}s"
+             if perf["vector_fanout_s"] is not None else ""))
+    if perf["scalar_s"] is not None:
+        print(f"[sweep] scalar oracle: {perf['scalar_s']}s"
+              + (f"  engine speedup: {perf['engine_speedup']}x"
+                 if perf["engine_speedup"] else " (sampled)"))
+    if acc["compared"]:
+        print(f"[sweep] equivalence: {acc['compared']} scenarios, "
+              f"max rel err {acc['max_rel_err']:.2e} "
+              f"(tol {acc['tolerance']}) -> "
+              f"{'PASS' if acc['pass'] else 'FAIL'}")
+
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"[sweep] wrote {args.out}")
+
+    return 0 if (acc["pass"] is not False) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

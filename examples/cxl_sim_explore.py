@@ -2,13 +2,18 @@
 
 Sweeps backend media and controller features for one workload and prints
 the latency landscape — the experiment a systems designer would run
-before committing silicon (the paper's own methodology).
+before committing silicon (the paper's own methodology). Runs on the
+vectorized sweep engine; ``--engine scalar`` replays on the per-access
+reference oracle instead (same numbers, slower).
 
   PYTHONPATH=src python examples/cxl_sim_explore.py --workload bfs
+  PYTHONPATH=src python examples/cxl_sim_explore.py --media-scale 2 \
+      --mlp 16   # 2x-latency media bins, narrow GPU load queue
 """
 import argparse
+import time
 
-from repro.sim import run
+from repro.sim import run, run_vectorized
 from repro.sim.workloads import TABLE_1B
 
 
@@ -17,26 +22,44 @@ def main():
     ap.add_argument("--workload", default="bfs",
                     choices=sorted(TABLE_1B))
     ap.add_argument("--ops", type=int, default=8000)
+    ap.add_argument("--engine", default="vector",
+                    choices=("vector", "scalar"))
+    ap.add_argument("--media-scale", type=float, default=1.0,
+                    help="latency multiplier for the SSD media bins "
+                         "(the sweep's media-latency axis)")
+    ap.add_argument("--mlp", type=int, default=64,
+                    help="GPU outstanding-load (MLP) depth")
+    ap.add_argument("--store-q", type=int, default=16,
+                    help="GPU store-queue depth")
     args = ap.parse_args()
+    engine = run_vectorized if args.engine == "vector" else run
     w = args.workload
-    base = run("gpu-dram", w, "dram", n_ops=args.ops).exec_ns
+
+    def sim(cfg, med):
+        return engine(cfg, w, med, n_ops=args.ops, mlp=args.mlp,
+                      store_q=args.store_q).exec_ns
+
+    t0 = time.perf_counter()
+    base = sim("gpu-dram", "dram")
+    media = ["dram"] + [
+        m if args.media_scale == 1.0 else f"{m}@{args.media_scale:g}"
+        for m in ("optane", "znand", "nand")]
     print(f"workload={w} (pattern {TABLE_1B[w].pattern}), ideal GPU-DRAM "
-          f"baseline normalized to 1.0\n")
-    print(f"{'config':10s} " + " ".join(f"{m:>9s}" for m in
-                                        ("dram", "optane", "znand",
-                                         "nand")))
+          f"baseline normalized to 1.0  [engine={args.engine}, "
+          f"mlp={args.mlp}, store_q={args.store_q}]\n")
+    print(f"{'config':10s} " + " ".join(f"{m:>10s}" for m in media))
     for cfg in ("uvm", "gds", "cxl", "cxl-naive", "cxl-dyn", "cxl-sr",
                 "cxl-ds"):
         row = []
-        for med in ("dram", "optane", "znand", "nand"):
-            if cfg in ("uvm",) and med != "dram":
-                row.append("     -")
+        for med in media:
+            if cfg == "uvm" and med != "dram":
+                row.append("      -")
                 continue
-            r = run(cfg, w, med, n_ops=args.ops)
-            row.append(f"{r.exec_ns / base:8.1f}x")
-        print(f"{cfg:10s} " + " ".join(f"{v:>9s}" for v in row))
-    print("\n(x = slowdown vs GPU-DRAM; lower is better. SR recovers the "
-          "read gap, DS the write/GC tail — Fig. 9 in the paper.)")
+            row.append(f"{sim(cfg, med) / base:9.1f}x")
+        print(f"{cfg:10s} " + " ".join(f"{v:>10s}" for v in row))
+    print(f"\n(x = slowdown vs GPU-DRAM; lower is better. SR recovers the "
+          f"read gap, DS the write/GC tail — Fig. 9 in the paper. "
+          f"{time.perf_counter()-t0:.2f}s)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,4 @@
+"""Runtime compatibility layer (jax 0.4.x shims, hypothesis fallback)."""
+from repro._compat import jax_compat
+
+jax_compat.install()

@@ -1,0 +1,145 @@
+"""Seeded-random fallback for the ``hypothesis`` property-testing API.
+
+The test suite uses a small slice of hypothesis (``given``, ``settings``
+and five strategies).  When the real package is installed (CI does so via
+``requirements-dev.txt``) it is always preferred; this fallback exists so
+the suite still collects and runs in environments where it is absent —
+each ``@given`` test then executes against ``max_examples`` deterministic
+pseudo-random draws instead of hypothesis' guided search.
+
+Activation lives in ``tests/conftest.py``::
+
+    try:
+        import hypothesis
+    except ImportError:
+        from repro._compat import hypothesis_fallback
+        hypothesis_fallback.register()
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 25
+_SEED = 0xC71_6B0
+
+
+class Strategy:
+    """A value generator: ``draw(rng) -> example``."""
+
+    def __init__(self, draw: Callable[[random.Random], Any], name: str):
+        self._draw = draw
+        self.name = name
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Strategy({self.name})"
+
+
+def integers(min_value: int = -(1 << 16), max_value: int = 1 << 16,
+             ) -> Strategy:
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    f"integers({min_value},{max_value})")
+
+
+def floats(min_value: float = -1e6, max_value: float = 1e6,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           ) -> Strategy:
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                    f"floats({min_value},{max_value})")
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10,
+          ) -> Strategy:
+    def draw(rng: random.Random) -> List[Any]:
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return Strategy(draw, f"lists({elements.name})")
+
+
+def tuples(*parts: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(p.draw(rng) for p in parts),
+                    "tuples(%s)" % ",".join(p.name for p in parts))
+
+
+def sampled_from(options: Sequence[Any]) -> Strategy:
+    opts = list(options)
+    return Strategy(lambda rng: rng.choice(opts), f"sampled_from[{len(opts)}]")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: rng.random() < 0.5, "booleans")
+
+
+def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
+    """Run the wrapped test once per generated example (seeded, so runs
+    are reproducible; the failing example's values appear in the
+    AssertionError chain via the re-raise note)."""
+
+    def decorate(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        # hypothesis maps positional strategies to the RIGHTMOST params;
+        # anything left over (e.g. pytest fixtures) stays in the wrapper's
+        # visible signature so pytest still injects it.
+        pos_names = params[len(params) - len(arg_strategies):] \
+            if arg_strategies else []
+        by_name = dict(zip(pos_names, arg_strategies), **kw_strategies)
+
+        @functools.wraps(fn)
+        def wrapper(**kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED + hash(fn.__qualname__) % (1 << 20))
+            for i in range(n):
+                drawn = {k: s.draw(rng) for k, s in by_name.items()}
+                try:
+                    fn(**kwargs, **drawn)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from exc
+
+        wrapper._is_fallback_given = True
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in by_name])
+        # pytest must not unwrap to the original signature
+        wrapper.__dict__.pop("__wrapped__", None)
+        return wrapper
+
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Record max_examples on the (possibly not-yet-wrapped) test."""
+
+    def decorate(fn: Callable) -> Callable:
+        fn._max_examples = max_examples
+        return fn
+
+    return decorate
+
+
+def register() -> None:
+    """Install this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:  # real package (or already registered)
+        return
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.assume = lambda cond: bool(cond)
+    mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from",
+                 "booleans"):
+        setattr(st, name, globals()[name])
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,116 @@
+"""Compatibility shims for jax < 0.5.
+
+The codebase targets the jax >= 0.5 sharding surface (``jax.set_mesh``,
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.sharding.
+get_abstract_mesh`` and ``jax.make_mesh(..., axis_types=...)``).  On
+jax 0.4.x those names either do not exist or have a narrower signature;
+``install()`` patches equivalents onto the jax namespace so the rest of
+the code (and the tests) can use one API everywhere.
+
+All shims are no-ops when the running jax already provides the name, so
+this module is safe to import under any jax version.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+
+import jax
+
+
+class _AxisType(enum.Enum):
+    """Stand-in for jax.sharding.AxisType (jax >= 0.5).
+
+    jax 0.4.x has no axis-type concept — every mesh axis behaves like
+    ``Auto`` — so the values only need to exist for call sites that pass
+    ``axis_types=(AxisType.Auto,) * n``.
+    """
+
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _physical_mesh():
+    from jax._src import mesh as mesh_lib
+
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+def _get_abstract_mesh():
+    return _physical_mesh().abstract_mesh
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    # On 0.4.x entering the Mesh context is the equivalent of set_mesh
+    # with Auto axes: shard_map and get_abstract_mesh pick it up.
+    with mesh:
+        yield mesh
+
+
+def _make_mesh_compat(axis_shapes, axis_names, *, axis_types=None,
+                      devices=None, **kw):
+    del axis_types  # implicit on 0.4.x
+    return _real_make_mesh(axis_shapes, axis_names, devices=devices, **kw)
+
+
+def _shard_map_compat(f=None, *, mesh=None, in_specs=None, out_specs=None,
+                      **kw):
+    from jax.experimental.shard_map import shard_map as _sm
+
+    if f is None:  # used as decorator factory
+        return functools.partial(_shard_map_compat, mesh=mesh,
+                                 in_specs=in_specs, out_specs=out_specs,
+                                 **kw)
+    if mesh is None:
+        mesh = _physical_mesh()
+        if mesh.empty:
+            raise ValueError(
+                "jax.shard_map shim: no mesh argument and no active mesh "
+                "context (enter one with jax.set_mesh(mesh))")
+    # 0.4.x rejects some collective layouts under replication checking
+    # that 0.5+ accepts; match the newer, laxer behaviour.
+    kw.setdefault("check_rep", False)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+_real_make_mesh = jax.make_mesh
+
+
+def _version_tuple() -> tuple:
+    try:
+        return tuple(int(p) for p in jax.__version__.split(".")[:2])
+    except ValueError:  # pragma: no cover - dev builds
+        return (0, 0)
+
+
+# jax 0.4.x GSPMD miscompiles concatenate when the operands are sharded
+# along the concatenated axis (it stitches the LOCAL shards and labels the
+# result with the global sharding — wrong values, silently). The fused-QKV
+# projection concatenates model-sharded weight matrices, so that fusion
+# must fall back to unfused matmuls on 0.4.x.
+SHARDED_CONCAT_SAFE = _version_tuple() >= (0, 5)
+
+
+def install() -> None:
+    """Idempotently add the jax >= 0.5 sharding surface to jax 0.4.x."""
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+    try:
+        import inspect
+
+        if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+            jax.make_mesh = _make_mesh_compat
+    except (TypeError, ValueError):  # pragma: no cover - exotic builds
+        pass
+
+
+install()

@@ -1,8 +1,10 @@
 from repro.sim.engine import RunResult, run, slowdown_vs_ideal
-from repro.sim.media import DRAM, MEDIA, NAND, OPTANE, ZNAND, Endpoint
+from repro.sim.media import (DRAM, MEDIA, NAND, OPTANE, ZNAND, Endpoint,
+                             resolve_media)
 from repro.sim.controller import RootPortController
-from repro.sim import workloads
+from repro.sim.vector import run as run_vectorized
+from repro.sim import sweep, workloads
 
-__all__ = ["RunResult", "run", "slowdown_vs_ideal", "DRAM", "MEDIA",
-           "NAND", "OPTANE", "ZNAND", "Endpoint", "RootPortController",
-           "workloads"]
+__all__ = ["RunResult", "run", "run_vectorized", "slowdown_vs_ideal",
+           "DRAM", "MEDIA", "NAND", "OPTANE", "ZNAND", "Endpoint",
+           "RootPortController", "resolve_media", "sweep", "workloads"]

@@ -57,8 +57,16 @@ class RootPortController:
         self.qos = QoSController()
         self.memory_queue: Deque[int] = deque(maxlen=QUEUE_DEPTH)
         self.sr_queue: Deque[int] = deque(maxlen=QUEUE_DEPTH)
-        # ring buffer of issued SR windows (start, end), newest last
+        # ring buffer of issued SR windows (start, end), newest last.
+        # _cov is its inverted index: covered unit -> number of live ring
+        # windows containing it, so coverage tests are O(1) instead of an
+        # O(ring) interval scan (the simulator's hottest path). NAIVE
+        # windows are single 64B requests; DYN/SR windows are always
+        # SR_OFFSET_UNIT-aligned multiples of it, so the unit size is
+        # per-mode and membership stays exactly "any(s <= a0 < e)".
         self.sr_ring: Deque[Tuple[int, int]] = deque(maxlen=64)
+        self._cov: Dict[int, int] = {}
+        self._cov_shift = 6 if sr_mode == "naive" else 8
         self.sr_stats = SRStats()
         # DS staging: stack + address index (the paper keeps the index in
         # the system bus SRAM as a red-black tree; a dict is our stand-in)
@@ -81,8 +89,24 @@ class RootPortController:
 
     # ---------------------------------------------------------------- SR
     def _covered(self, addr: int) -> bool:
-        a0 = addr - addr % MEM_REQ_BYTES
-        return any(s <= a0 < e for (s, e) in self.sr_ring)
+        # ring windows are unions of whole units (64B in naive mode, 256B
+        # otherwise), so unit membership in the inverted index is exactly
+        # "any(s <= a0 < e)" over the ring
+        return addr >> self._cov_shift in self._cov
+
+    def _ring_append(self, start: int, end: int) -> None:
+        ring, cov, sh = self.sr_ring, self._cov, self._cov_shift
+        if len(ring) == ring.maxlen:            # evict oldest window
+            s0, e0 = ring.popleft()
+            for u in range(s0 >> sh, e0 >> sh):
+                n = cov[u] - 1
+                if n:
+                    cov[u] = n
+                else:
+                    del cov[u]
+        ring.append((start, end))
+        for u in range(start >> sh, end >> sh):
+            cov[u] = cov.get(u, 0) + 1
 
     def _first_uncovered(self, addr: int, limit: int = 16) -> int:
         a = addr - addr % SR_OFFSET_UNIT
@@ -151,7 +175,7 @@ class RootPortController:
                 end = start + g
         self.sr_queue.append(addr)
         self.ep.prefetch(now, start, end - start)
-        self.sr_ring.append((start, end))
+        self._ring_append(start, end)
         self.sr_stats.issued += 1
         self.sr_stats.bytes += end - start
         if self.sr_queue:

@@ -30,7 +30,8 @@ import numpy as np
 from repro.sim import workloads as wl
 from repro.sim.controller import (CXL_RTT_NS, GPU_MEM_NS,
                                   RootPortController)
-from repro.sim.media import MEDIA, DRAM, Endpoint, MediaModel
+from repro.sim.media import (MEDIA, DRAM, Endpoint, MediaModel,
+                             resolve_media)
 
 COMPUTE_NS = 8.0
 LLC_NS = 4.0
@@ -89,9 +90,20 @@ class RunResult:
 def run(config: str, workload: str, media_name: str = "dram", *,
         n_ops: int = 60_000, gpu_mem_frac: float = 0.1,
         working_set: int = 640 << 20, seed: int = 0,
-        record_samples: bool = False) -> RunResult:
-    trace = wl.generate(workload, n_ops, working_set, seed)
-    media = MEDIA[media_name]
+        record_samples: bool = False, mlp: int = MLP,
+        store_q: int = STORE_Q,
+        trace: Optional[np.ndarray] = None) -> RunResult:
+    """Scalar reference engine (per-access event loop) — the oracle the
+    vectorized engine in ``repro.sim.vector`` is validated against.
+
+    mlp / store_q are the GPU's outstanding-load and store-queue depths
+    (sweepable); ``media_name`` accepts scaled variants ("znand@2"); an
+    explicit ``trace`` (structured kind/addr array) overrides the named
+    workload's generated trace.
+    """
+    if trace is None:
+        trace = wl.generate_cached(workload, n_ops, working_set, seed)
+    media = resolve_media(media_name)
     llc = LRU(LLC_LINES)
     gpu_mem = int(working_set * gpu_mem_frac)
 
@@ -124,7 +136,7 @@ def run(config: str, workload: str, media_name: str = "dram", *,
 
     def drain_loads() -> None:
         nonlocal t
-        while loads_q and len(loads_q) >= MLP:
+        while loads_q and len(loads_q) >= mlp:
             done, _ = heapq.heappop(loads_q)
             t = max(t, done)
 
@@ -178,7 +190,7 @@ def run(config: str, workload: str, media_name: str = "dram", *,
                 samples.append((t, done - t, 1))
             t += LLC_NS
         else:                                           # ---- store
-            while stores_q and (len(stores_q) >= STORE_Q):
+            while stores_q and (len(stores_q) >= store_q):
                 t = max(t, heapq.heappop(stores_q))
             if config == "gpu-dram":
                 done = hbm_access(t)
@@ -203,7 +215,8 @@ def run(config: str, workload: str, media_name: str = "dram", *,
         t = max(t, heapq.heappop(stores_q))
 
     return RunResult(
-        config=config, workload=workload, media=media_name,
+        config=config, workload=workload,
+        media=getattr(media_name, "name", media_name),
         exec_ns=t - t_warm, n_ops=len(trace) - warm_i,
         ep_hit_rate=ep.hit_rate() if ep else 0.0,
         sr=dataclasses.asdict(ctl.sr_stats) if ctl else None,

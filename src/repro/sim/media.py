@@ -27,8 +27,11 @@ integration). Fidelity points that matter for reproducing Fig. 9:
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import OrderedDict
-from typing import Optional
+from typing import Optional, Union
+
+import numpy as np
 
 from repro.core.qos import DevLoad
 
@@ -49,6 +52,15 @@ class MediaModel:
     def xfer_ns(self, nbytes: int) -> float:
         return nbytes / self.bw_gbps  # GB/s == bytes/ns
 
+    def scaled(self, latency: float = 1.0, bw: float = 1.0) -> "MediaModel":
+        """Derived part with scaled service latencies / bandwidth — the
+        sweep's media-latency-distribution axis (e.g. a 2x-slower Z-NAND
+        bin, or a next-gen part at 0.5x)."""
+        return dataclasses.replace(
+            self, name=f"{self.name}@{latency:g}x",
+            read_ns=self.read_ns * latency, write_ns=self.write_ns * latency,
+            gc_ns=self.gc_ns * latency, bw_gbps=self.bw_gbps * bw)
+
 
 # Table 1a media. DRAM numbers approximate DDR5-5600 closed-page access;
 # SSD numbers are small-read/-write service times of the named parts.
@@ -68,6 +80,41 @@ NAND = MediaModel("NAND", read_ns=45_000.0, write_ns=90_000.0,
                   gc_every_bytes=64 << 10, gc_ns=2_000 * US)
 
 MEDIA = {"dram": DRAM, "optane": OPTANE, "znand": ZNAND, "nand": NAND}
+
+
+def resolve_media(spec: Union[str, MediaModel]) -> MediaModel:
+    """Resolve a media spec: a MediaModel, a name ("znand"), or a scaled
+    variant "name@<latency-mult>" (e.g. "znand@2" = tail-bin Z-NAND with
+    2x service latency)."""
+    if isinstance(spec, MediaModel):
+        return spec
+    if "@" in spec:
+        name, mult = spec.split("@", 1)
+        return MEDIA[name].scaled(latency=float(mult))
+    return MEDIA[spec]
+
+
+def channel_timeline(arrivals: np.ndarray, channels: np.ndarray,
+                     n_channels: int, service_ns: float) -> np.ndarray:
+    """Vectorized FIFO service over parallel channels (constant service).
+
+    For each channel the completion recurrence is
+    ``done_i = max(a_i, done_{i-1}) + L``, whose closed form is
+    ``done_i = (i+1)*L + cummax(a_j - j*L)`` — one cumulative-maximum pass
+    per channel instead of a per-request Python loop. This is the
+    miss-address-array form of ``Endpoint._media_fetch`` for media without
+    internal tasks (DRAM expanders), used by the vectorized engine.
+    """
+    done = np.empty_like(arrivals)
+    for c in range(n_channels):
+        idx = np.nonzero(channels == c)[0]
+        if idx.size == 0:
+            continue
+        a = arrivals[idx]
+        i = np.arange(idx.size)
+        done[idx] = (i + 1) * service_ns \
+            + np.maximum.accumulate(a - i * service_ns)
+    return done
 
 
 class Endpoint:
@@ -159,11 +206,11 @@ class Endpoint:
             if ready <= now:
                 self.stats["hits"] += 1
             return max(now, ready) + DRAM.read_ns + DRAM.xfer_ns(nbytes)
-        import heapq as _hq
-        slot = _hq.heappop(self.demand_mshr)
+        # single-slot demand MSHR: the heap degenerates to one scalar
+        slot = self.demand_mshr[0]
         start = max(now, slot)
         done = self._media_fetch(start, addr, self.BLOCK)
-        _hq.heappush(self.demand_mshr, done)
+        self.demand_mshr[0] = done
         self._fill(block, done)
         wait = (start - now) / (self.media.read_ns + 1.0)
         self._decay_pressure(now)
@@ -177,7 +224,6 @@ class Endpoint:
         dt = max(0.0, now - self._pressure_t)
         self._pressure_t = now
         tau = 10.0 * (self.media.read_ns + 1.0)
-        import math
         self.demand_pressure *= math.exp(-dt / tau)
 
     def prefetch(self, now: float, addr: int, nbytes: int) -> float:

@@ -126,3 +126,24 @@ def pattern_class(name: str) -> str:
     if p == "composite":
         return "mixed"
     return p
+
+
+# --------------------------------------------------------------------- cache
+# Traces are deterministic in (name, n_ops, working_set, seed); a sweep
+# replays the same trace against many config x media scenarios, so both
+# engines share one generation per key. Treat cached traces as read-only.
+
+_TRACE_CACHE: Dict[Tuple[str, int, int, int], np.ndarray] = {}
+_TRACE_CACHE_MAX = 64
+
+
+def generate_cached(name: str, n_ops: int = 60_000,
+                    working_set: int = 640 << 20,
+                    seed: int = 0) -> np.ndarray:
+    key = (name, n_ops, working_set, seed)
+    tr = _TRACE_CACHE.get(key)
+    if tr is None:
+        if len(_TRACE_CACHE) >= _TRACE_CACHE_MAX:
+            _TRACE_CACHE.pop(next(iter(_TRACE_CACHE)))
+        tr = _TRACE_CACHE[key] = generate(name, n_ops, working_set, seed)
+    return tr

@@ -1,0 +1,181 @@
+"""Vectorized-engine equivalence: repro.sim.vector vs the scalar oracle.
+
+The vectorized engine must reproduce the scalar reference engine's
+per-config cycle totals within 1% on every config (in practice the two
+agree to machine epsilon — the tolerance leaves room for the closed-form
+paths' float reassociation). Property-style coverage replays randomly
+generated traces through both engines across all eight configurations.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import engine as scalar_engine
+from repro.sim import sweep as sweep_lib
+from repro.sim import vector
+from repro.sim.media import MEDIA, channel_timeline, resolve_media
+
+N = 4000
+TOL = 0.01
+ALL_CONFIGS = vector.ALL_CONFIGS
+
+
+def _pair(config, workload, media, **kw):
+    r1 = scalar_engine.run(config, workload, media, n_ops=N, **kw)
+    r2 = vector.run(config, workload, media, n_ops=N, **kw)
+    return r1, r2
+
+
+def _assert_close(r1, r2, ctx):
+    rel = abs(r2.exec_ns - r1.exec_ns) / max(abs(r1.exec_ns), 1e-12)
+    assert rel <= TOL, f"{ctx}: {r1.exec_ns} vs {r2.exec_ns} (rel {rel:.2e})"
+
+
+@pytest.mark.parametrize("config", ALL_CONFIGS)
+def test_equivalence_dram(config):
+    for w in ("vadd", "bfs"):
+        r1, r2 = _pair(config, w, "dram")
+        _assert_close(r1, r2, f"{config}/{w}/dram")
+
+
+@pytest.mark.parametrize("config",
+                         [c for c in ALL_CONFIGS if c.startswith("cxl")])
+def test_equivalence_ssd_exact(config):
+    """The SSD path replays the identical controller state machine, so
+    cycle totals and SR/DS statistics must match the oracle exactly."""
+    for w, m in (("vadd", "znand"), ("bfs", "znand"), ("rsum", "optane")):
+        r1, r2 = _pair(config, w, m)
+        assert r1.exec_ns == pytest.approx(r2.exec_ns, rel=1e-12), \
+            (config, w, m)
+        assert r1.sr == r2.sr and r1.ds == r2.ds, (config, w, m)
+        assert r1.ep_hit_rate == pytest.approx(r2.ep_hit_rate, abs=1e-12)
+
+
+def _random_trace(rng, n):
+    """Random op trace spanning compute/load/store mixes and address
+    patterns the bundled workloads don't cover."""
+    p_comp = rng.uniform(0.1, 0.5)
+    p_load = rng.uniform(0.2, 0.5)
+    kind = rng.choice(np.array([0, 1, 2], np.uint8), size=n,
+                      p=[p_comp, p_load, 1.0 - p_comp - p_load])
+    ws = int(rng.integers(8, 64)) << 20
+    style = rng.integers(0, 3)
+    if style == 0:       # streaming
+        addr = (np.arange(n, dtype=np.int64) * 64) % ws
+    elif style == 1:     # hot-set
+        addr = (rng.integers(0, ws // 4096, n) * 64) % ws
+    else:                # uniform random
+        addr = rng.integers(0, ws // 64, n) * 64
+    out = np.zeros(n, dtype=[("kind", "u1"), ("addr", "i8")])
+    out["kind"] = kind
+    out["addr"] = addr
+    return out
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_equivalence_random_traces(seed):
+    """Property-style: random traces through both engines, all eight
+    configs (DRAM media for host configs, mixed media for CXL)."""
+    rng = np.random.default_rng(1000 + seed)
+    trace = _random_trace(rng, 2500)
+    media_pick = ("dram", "optane", "znand", "nand")[seed % 4]
+    for config in ALL_CONFIGS:
+        media = "dram" if config in ("gpu-dram", "uvm") else media_pick
+        r1 = scalar_engine.run(config, "vadd", media, n_ops=len(trace),
+                               trace=trace)
+        r2 = vector.run(config, "vadd", media, n_ops=len(trace),
+                        trace=trace)
+        _assert_close(r1, r2, f"random[{seed}]/{config}/{media}")
+
+
+def test_equivalence_queue_shape():
+    """MLP / store-queue depth are sweep axes; equivalence must hold away
+    from the defaults (narrow queues exercise the blocking paths)."""
+    for config, media in (("gpu-dram", "dram"), ("cxl", "dram"),
+                          ("cxl-sr", "znand"), ("cxl-ds", "znand")):
+        r1, r2 = _pair(config, "vadd", media, mlp=8, store_q=2)
+        _assert_close(r1, r2, f"{config}/{media}/mlp8/sq2")
+
+
+def test_media_variants_resolve_and_order():
+    m2 = resolve_media("znand@2")
+    assert m2.read_ns == 2 * MEDIA["znand"].read_ns
+    assert m2.gc_ns == 2 * MEDIA["znand"].gc_ns
+    r1, r2 = _pair("cxl-sr", "vadd", "znand@2")
+    _assert_close(r1, r2, "cxl-sr/vadd/znand@2")
+    base = vector.run("cxl-sr", "vadd", "znand", n_ops=N).exec_ns
+    assert r2.exec_ns > base       # slower media bin -> slower run
+
+
+def test_record_samples_parity():
+    r1, r2 = _pair("cxl-ds", "bfs", "znand", record_samples=True)
+    assert len(r1.samples) == len(r2.samples)
+    s1 = np.asarray(r1.samples)
+    s2 = np.asarray(r2.samples)
+    np.testing.assert_allclose(s1, s2, rtol=1e-9, atol=1e-6)
+
+
+def test_channel_timeline_matches_naive():
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.uniform(0, 30, 500))
+    chans = rng.integers(0, 4, 500)
+    got = channel_timeline(arrivals, chans, 4, 17.5)
+    busy = [0.0] * 4
+    want = np.empty_like(arrivals)
+    for i, (a, c) in enumerate(zip(arrivals, chans)):
+        busy[c] = max(a, busy[c]) + 17.5
+        want[i] = busy[c]
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+def test_running_kth_largest_matches_sort():
+    rng = np.random.default_rng(11)
+    vals = rng.uniform(0, 1e6, 300)
+    for m in (1, 4, 32):
+        got = vector._running_kth_largest(vals, m)
+        for k in range(len(vals)):
+            want = -np.inf if k < m else np.sort(vals[:k])[-m]
+            assert got[k] == pytest.approx(want), (m, k)
+
+
+def test_event_loop_bridge_oracle():
+    """The object-driven compressed event loop is the bridge between the
+    scalar engine and the inlined SSD loop — all three must agree."""
+    from repro.sim.media import resolve_media as rm
+    from repro.sim.vector import _run_cxl_events, bundle_for
+
+    for config, w, m in (("cxl-sr", "vadd", "znand"),
+                         ("cxl-ds", "bfs", "znand"),
+                         ("cxl", "rsum", "optane")):
+        bundle = bundle_for(w, N, 640 << 20, 0)
+        gpu_mem = int((640 << 20) * 0.1)
+        r_ev = _run_cxl_events(bundle, config, rm(m), gpu_mem, 64, 16,
+                               False, m)
+        r_sc = scalar_engine.run(config, w, m, n_ops=N)
+        r_ve = vector.run(config, w, m, n_ops=N)
+        assert r_ev.exec_ns == pytest.approx(r_sc.exec_ns, rel=1e-12)
+        assert r_ev.exec_ns == pytest.approx(r_ve.exec_ns, rel=1e-12)
+        assert r_ev.sr == r_sc.sr and r_ev.ds == r_sc.ds
+
+
+def test_sweep_smoke_artifact():
+    """The sweep harness must produce a green perf/accuracy payload."""
+    scen = sweep_lib.smoke_matrix(n_ops=1500)[:12]
+    payload = sweep_lib.bench(scen, compare=True)
+    assert payload["matrix"]["n_scenarios"] == len(scen)
+    assert payload["accuracy"]["pass"] is True
+    assert payload["accuracy"]["max_rel_err"] <= TOL
+    assert payload["perf"]["vector_s"] > 0
+    rows = payload["results"]
+    assert len(rows) == len(scen)
+    for row in rows.values():
+        assert row["exec_ns"] > 0
+
+
+def test_sweep_fanout_matches_inprocess():
+    scen = sweep_lib.matrix(("cxl", "cxl-sr"), ("rsum",), ("znand",),
+                            n_ops=1500)
+    a = sweep_lib.run_sweep(scen, workers=0)
+    b = sweep_lib.run_sweep(scen, workers=2)
+    assert a.keys() == b.keys()
+    for k in a:
+        assert a[k]["exec_ns"] == pytest.approx(b[k]["exec_ns"], rel=1e-12)
