@@ -1,8 +1,11 @@
 """Serving example: continuous batching + tiered KV page lifecycle.
 
-Shows the deterministic-store page retirement (slots free immediately,
-pages flush to the host tier in the background under QoS control) and
-prefix reuse from the cold tier.
+Shows the device-resident hot path (chunked prefill, fused on-device
+sampling), the deterministic-store page retirement (slots free
+immediately, pages flush to the host tier in the background under QoS
+control) and prefix reuse from the cold tier: resubmitted requests are
+restored from retired pages — the speculative-read fetch — with zero
+prefill dispatches.
 
   PYTHONPATH=src python examples/serve_kv_offload.py
 """
@@ -20,19 +23,38 @@ def main():
     rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
     with jax.set_mesh(make_host_mesh()):
         params = M.init_model(jax.random.PRNGKey(0), cfg)
-        engine = ServingEngine(params, cfg, rc, n_slots=3, max_seq=64)
+        engine = ServingEngine(params, cfg, rc, n_slots=3, max_seq=64,
+                               prefill_chunk=8)
         for rid in range(7):
             engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
                                   max_new_tokens=8))
         finished = engine.run()
+
+        # prefix reuse: resubmit two of the finished rids — their pages
+        # come back from the tiered store instead of re-prefilling
+        prefill_before = engine.stats["prefill_dispatches"]
+        for rid in (0, 3):
+            engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
+                                  max_new_tokens=4))
+        finished = engine.run()      # returns the cumulative finished list
+
     for r in finished[:3]:
         print(f"request {r.rid}: prompt={r.prompt} -> {r.generated}")
+    restored = [r for r in finished if r.restored]
     print(f"{len(finished)} requests served, "
-          f"{engine.stats['decode_tokens']} tokens; "
+          f"{engine.stats['decode_tokens']} tokens in "
+          f"{engine.stats['prefill_dispatches']} prefill + "
+          f"{engine.stats['decode_dispatches']} decode dispatches; "
           f"{engine.stats['flushes']} page sets flushed to the cold tier "
-          f"({engine.store.bytes / 1024:.0f} KiB); "
+          f"({engine.store.bytes / 1024:.0f} KiB held, "
+          f"{engine.store.evictions} LRU evictions); "
           f"staging never blocked: {engine.flusher.suppressed} flush "
           f"windows deferred by QoS")
+    print(f"prefix reuse: {len(restored)} resubmits restored from retired "
+          f"pages with {engine.stats['prefill_dispatches'] - prefill_before}"
+          f" extra prefill dispatches "
+          f"(rids {[r.rid for r in restored]}, "
+          f"hits={engine.stats['prefix_hits']})")
 
 
 if __name__ == "__main__":

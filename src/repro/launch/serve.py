@@ -40,9 +40,13 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
     tput = engine.stats["decode_tokens"] / dt if dt > 0 else 0.0
     print(f"[serve] {len(finished)}/{n_requests} requests, "
           f"{engine.stats['decode_tokens']} tokens in {dt:.1f}s "
-          f"({tput:.1f} tok/s), flushed pages for "
+          f"({tput:.1f} tok/s; {engine.stats['prefill_dispatches']} prefill"
+          f" + {engine.stats['decode_dispatches']} decode dispatches, "
+          f"{engine.stats['prefix_hits']} prefix hits), flushed pages for "
           f"{engine.stats['flushes']} requests, host tier holds "
-          f"{len(engine.store.pages)} retired caches")
+          f"{len(engine.store.pages)} retired caches "
+          f"({engine.store.bytes / 1024:.0f} KiB, "
+          f"{engine.store.evictions} evictions)")
     return engine, finished
 
 

@@ -201,6 +201,61 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     return out.reshape(b, 1, h, d).astype(q.dtype)
 
 
+def chunk_prefill_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                            v_cache: jnp.ndarray, pos: jnp.ndarray,
+                            kv_block: int = 2048,
+                            logit_softcap: float = 0.0) -> jnp.ndarray:
+    """Multi-query flash-decode for chunked prefill against a live cache.
+
+    q: [B, C, H, D] — a chunk of C fresh tokens whose K/V were already
+    written into the caches at [pos, pos+C) (per-row ``pos``, int32 [B]).
+    caches: [B, Smax, Hkv, D]. Query i of row b attends to cache positions
+    <= pos[b] + i (prior context plus the intra-chunk causal prefix).
+    Returns [B, C, H, D].
+    """
+    b, c, h, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    group = h // hkv
+    kv_block = min(kv_block, smax)
+    assert smax % kv_block == 0
+    nkv = smax // kv_block
+    scale = 1.0 / (d ** 0.5)
+    qh = q.reshape(b, c, hkv, group, d)
+    limit = (jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))[:, None]
+             + jnp.arange(c, dtype=jnp.int32)[None])          # [B, C]
+
+    kb = jnp.moveaxis(k_cache.reshape(b, nkv, kv_block, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v_cache.reshape(b, nkv, kv_block, hkv, d), 1, 0)
+
+    def kv_step(carry, inputs):
+        acc, m_prev, l_prev = carry                 # acc [B,C,Hkv,G,D]
+        kj, vj, j = inputs                          # kj [B,Bk,Hkv,D]
+        s = jnp.einsum("bchgd,bkhd->bchgk", qh, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if logit_softcap > 0.0:
+            s = logit_softcap * jnp.tanh(s / logit_softcap)
+        kv_pos = j * kv_block + jnp.arange(kv_block)            # [Bk]
+        mask = kv_pos[None, None, :] <= limit[:, :, None]       # [B, C, Bk]
+        s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bchgk,bkhd->bchgd", p, vj.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc = acc * alpha[..., None] + pv
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, c, hkv, group, d), jnp.float32)
+    m0 = jnp.full((b, c, hkv, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, c, hkv, group), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                  (kb, vb, jnp.arange(nkv)),
+                                  unroll=inner_unroll())
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, c, h, d).astype(q.dtype)
+
+
 def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray, new_k: jnp.ndarray,
                            new_v: jnp.ndarray, pos: jnp.ndarray, *,
@@ -240,6 +295,30 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         page_axes = None
     if b % max(_axes_size(batch_axes), 1):
         batch_axes = None
+
+    # single-rank fast path: with no page or batch parallelism the
+    # shard_map wrapper, rank masking and cross-rank combine are pure
+    # overhead — write the new KV with one contiguous per-row
+    # dynamic_update_slice and run the flash-decode directly (identical
+    # math; the serving decode tick is latency-critical)
+    if _axes_size(page_axes) <= 1 and _axes_size(batch_axes) <= 1:
+        hkv_ = k_pages.shape[3]
+        smax = k_pages.shape[1] * k_pages.shape[2]
+        pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        kf = k_pages.reshape(b, smax, hkv_, d)
+        vf = v_pages.reshape(b, smax, hkv_, d)
+
+        def write(buf, new, p):
+            return jax.lax.dynamic_update_slice(
+                buf, new.astype(buf.dtype), (p, 0, 0))
+
+        kf = jax.vmap(write)(kf, new_k, pb)
+        vf = jax.vmap(write)(vf, new_v, pb)
+        acc, m, l = _flash_decode_partial(q, kf, vf, pb + 1, kv_block,
+                                          logit_softcap)
+        out = (acc / jnp.maximum(l[..., None], 1e-30)).reshape(
+            b, 1, hkv_ * group, d).astype(q.dtype)
+        return (out, kf.reshape(k_pages.shape), vf.reshape(v_pages.shape))
 
     q_spec = P(batch_axes, None, None, None)
     kv_spec = P(batch_axes, page_axes, None, None, None)

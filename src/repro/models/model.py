@@ -19,8 +19,8 @@ from repro.configs.base import ModelConfig, RunConfig
 from repro.core import speculative_read as sr
 from repro.models import attention as attn_lib
 from repro.models import mamba2, moe, transformer, xlstm
-from repro.models.layers import (embed_apply, embed_init, pdtype, rmsnorm,
-                                 rmsnorm_init, sinusoidal_positions,
+from repro.models.layers import (embed_apply, embed_init, mlp_apply, pdtype,
+                                 rmsnorm, rmsnorm_init, sinusoidal_positions,
                                  softmax_xent, unembed_apply)
 
 
@@ -516,6 +516,136 @@ def _decode_ssm(params, cfg, rc, x, pos, cache, param_specs):
 # ---------------------------------------------------------------------------
 # prefill (inference context ingestion; returns logits of last position)
 # ---------------------------------------------------------------------------
+
+
+def _block_prefill_cached(layer: Dict, cfg: ModelConfig, rc: RunConfig,
+                          x: jnp.ndarray, positions: jnp.ndarray,
+                          pos: jnp.ndarray, kv: Dict, *, moe_mlp: bool):
+    """One block over a C-token chunk, writing K/V into the paged cache.
+
+    x: [B, C, d]; pos: [B] per-row start positions; kv: {"k","v"} each
+    [B, n_pages, page, Hkv, D]. The chunk K/V are written in-graph at
+    [pos, pos+C) (dynamic_update_slice on the flattened page view) before
+    the attention, so the chunk attends to prior context + its own causal
+    prefix through one multi-query flash-decode.
+    """
+    h = rmsnorm(layer["ln_attn"], x, cfg.norm_eps)
+    q, k, v = attn_lib.qkv_project(layer["attn"], cfg, h, positions,
+                                   fuse_qkv=rc.fuse_qkv)
+    bsz, n_pages, page = kv["k"].shape[0], kv["k"].shape[1], kv["k"].shape[2]
+    smax = n_pages * page
+    kf = kv["k"].reshape(bsz, smax, cfg.n_kv_heads, cfg.head_dim)
+    vf = kv["v"].reshape(bsz, smax, cfg.n_kv_heads, cfg.head_dim)
+
+    def write(buf, new, p):
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
+                                            (p, 0, 0))
+
+    kf = jax.vmap(write)(kf, k, pos)
+    vf = jax.vmap(write)(vf, v, pos)
+    o = attn_lib.chunk_prefill_attention(
+        q, kf, vf, pos, logit_softcap=cfg.attn_logit_softcap)
+    x = x + o.reshape(bsz, -1, cfg.q_dim) @ layer["attn"]["wo"]
+    h = rmsnorm(layer["ln_mlp"], x, cfg.norm_eps)
+    if moe_mlp:
+        y, _ = moe.moe_apply_ep(layer["moe"], cfg, h)
+        x = x + y
+    else:
+        x = x + mlp_apply(layer["mlp"], cfg, h)
+    return x, {"k": kf.reshape(kv["k"].shape), "v": vf.reshape(kv["v"].shape)}
+
+
+def prefill_step_cached(params: Dict, cfg: ModelConfig, rc: RunConfig,
+                        tokens, cache: Dict,
+                        param_specs: Dict) -> Tuple[jnp.ndarray, Dict]:
+    """Chunked multi-token prefill that writes the paged KV cache in-graph.
+
+    tokens: [B, C] int32 (audio: [B, K, C]). Every batch row ingests its C
+    tokens starting at its own ``cache["pos"]``; returns (logits for all C
+    chunk positions, updated cache with pos advanced by C). Attention
+    families (dense/moe/audio) run one parallel chunk forward per layer;
+    recurrent families (vlm/hybrid/ssm) fall back to an in-graph
+    ``lax.scan`` over ``decode_step`` — still a single dispatch per chunk.
+    """
+    fam = cfg.family
+    if fam not in ("dense", "moe", "audio"):
+        return _prefill_scan_cached(params, cfg, rc, tokens, cache,
+                                    param_specs)
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], cfg, tokens)
+    b, c = x.shape[0], x.shape[1]
+    positions = (pos.reshape(b, 1).astype(jnp.int32)
+                 + jnp.arange(c, dtype=jnp.int32)[None])
+    if fam == "audio" or not cfg.use_rope:
+        x = x + sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    def body(x, layer, kv):
+        return _block_prefill_cached(layer, cfg, rc, x, positions, pos, kv,
+                                     moe_mlp=(fam == "moe"))
+
+    key = stacked_key(cfg)
+    x, kv_out = sr.stream_layers(
+        body, x, params[key], param_specs[key], n_layers=cfg.n_layers,
+        prefetch_depth=rc.sr_prefetch_depth, granularity=rc.sr_granularity,
+        mode="infer", remat=False, stacked_extras=cache["kv"],
+        unroll=rc.scan_unroll)
+    new_cache = dict(cache)
+    new_cache["kv"] = kv_out
+    new_cache["pos"] = pos + c
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed_apply(params["embed"], cfg, x)
+    return logits, new_cache
+
+
+def _prefill_scan_cached(params, cfg, rc, tokens, cache, param_specs):
+    """Sequential-family prefill: scan decode_step over the chunk in-graph."""
+
+    def step(cache, tok):
+        logits, cache = decode_step(params, cfg, rc, tok[:, None], cache,
+                                    param_specs)
+        return cache, logits
+
+    cache, ls = jax.lax.scan(step, cache, jnp.moveaxis(tokens, -1, 0))
+    # ls: [C, B, 1, V] -> [B, C, V]
+    logits = jnp.moveaxis(ls[:, :, 0], 0, 1)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# on-device sampling (fused into the serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def last_token_logits(logits: jnp.ndarray) -> jnp.ndarray:
+    """Final-position logits row per batch element: [B, V].
+
+    [B, S, V] -> last position; audio [B, K, S, V] -> codebook-0 last
+    position (the serving engine feeds one shared token to all codebooks).
+    """
+    if logits.ndim == 4:
+        return logits[:, 0, -1]
+    return logits[:, -1]
+
+
+def sample_tokens(logits_row: jnp.ndarray, key,
+                  temperature: float) -> jnp.ndarray:
+    """Greedy / temperature sampling on device. logits_row: [B, V] -> [B].
+
+    Deterministic for a given PRNG key — no host RNG anywhere, so results
+    cannot vary with the host numpy version. Temperature sampling draws one
+    uniform per row and inverts the softmax CDF: exact categorical sampling
+    with B PRNG evaluations instead of the B*V gumbel draws
+    ``jax.random.categorical`` needs (~4x cheaper per tick at serving-scale
+    vocabs on CPU).
+    """
+    row = logits_row.astype(jnp.float32)
+    if temperature and temperature > 0:
+        p = jax.nn.softmax(row / temperature, axis=-1)
+        cdf = jnp.cumsum(p, axis=-1)
+        u = jax.random.uniform(key, (row.shape[0],), dtype=jnp.float32)
+        return (cdf < u[:, None] * cdf[:, -1:]).sum(axis=-1).astype(
+            jnp.int32)
+    return jnp.argmax(row, axis=-1).astype(jnp.int32)
 
 
 def prefill_step(params: Dict, cfg: ModelConfig, rc: RunConfig, batch: Dict,

@@ -15,11 +15,31 @@ The paper's storage-expansion loop, at request granularity:
    driver and the simulator use; under congestion flushes pause and the
    prefetch window narrows.
 
-The decode step itself is models.model.decode_step — the page-sharded
-distributed attention with owner-rank writes.
+The hot path is device-resident:
+
+ * prefill — chunked multi-token ingestion (``models.model.
+   prefill_step_cached``): each chunk is one jitted dispatch that slices
+   the request's slot out of the batch cache, writes the chunk's K/V
+   in-graph (``dynamic_update_slice``) and splices the slot back — no
+   per-token dispatch, no host-side cache surgery.
+ * decode — one jitted dispatch per tick that runs the page-sharded
+   ``decode_step`` for every slot AND samples the next token on device
+   (argmax, or inverse-CDF categorical sampling via the jax PRNG — see
+   ``models.model.sample_tokens``). Last tokens, positions and the PRNG
+   key stay device arrays across ticks; the host never calls
+   ``block_until_ready`` or reads logits except when a slot retires.
+ * prefix reuse — on admit, a request whose rid (or prompt) matches a
+   retired entry in the staging index or the host page store restores its
+   pages into the slot (the speculative-read fetch) with zero prefill
+   dispatches.
+
+``legacy_host_path=True`` preserves the pre-rewrite hot path (per-token
+prefill dispatches, host softmax/numpy sampling, per-tick logits
+transfer + sync) as the measured baseline for ``benchmarks/serve_bench``.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
@@ -43,22 +63,84 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     slot: Optional[int] = None
+    restored: bool = False          # served via prefix restore (no prefill)
+    # device-resident bookkeeping: the sampled-token handle plus this
+    # request's tick range in the engine trace; the host only materializes
+    # tokens at retirement (one [n_slots] transfer per tick, memoized
+    # across co-retiring slots)
+    _first_tok: Optional[jax.Array] = dataclasses.field(
+        default=None, repr=False)
+    _start_tick: int = 0
+    _n_gen: int = 0                 # total generated tokens (stop check)
+    _n_dec: int = 0                 # decode ticks participated (trace span)
+
+
+# Families whose full per-request decode state lives in the paged "kv"
+# leaves — the only ones prefix restore can reconstruct a slot from.
+_RESTORABLE_FAMILIES = ("dense", "moe", "audio")
+
+
+def _fsdp_axis_size() -> int:
+    """Product of the pool-tier (FSDP) mesh axes under the active mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    sizes = dict(mesh.shape)
+    return sizes.get("data", 1) * sizes.get("pod", 1)
 
 
 class HostPageStore:
-    """Cold tier for retired KV pages (the SSD-EP analogue)."""
+    """Cold tier for retired KV pages (the SSD-EP analogue).
 
-    def __init__(self):
-        self.pages: Dict[int, Dict] = {}
+    LRU-bounded by ``budget_bytes``: inserts evict the least-recently-used
+    entries until the store fits; ``get`` refreshes recency. ``bytes`` and
+    ``evictions`` are surfaced through the engine stats. ``on_evict`` is
+    called for every dropped or replaced entry so side indexes (the
+    engine's prompt->rid alias map) stay bounded too.
+    """
+
+    def __init__(self, budget_bytes: Optional[int] = None, on_evict=None):
+        self.pages: "collections.OrderedDict[int, Dict]" = \
+            collections.OrderedDict()
+        self.budget_bytes = budget_bytes
+        self.on_evict = on_evict
         self.bytes = 0
+        self.evictions = 0
 
-    def put(self, rid: int, kv_slot) -> None:
-        host = jax.tree_util.tree_map(np.asarray, kv_slot)
-        self.pages[rid] = host
-        self.bytes += sum(a.nbytes for a in jax.tree_util.tree_leaves(host))
+    @staticmethod
+    def _entry_bytes(entry) -> int:
+        return sum(a.nbytes for a in jax.tree_util.tree_leaves(entry)
+                   if hasattr(a, "nbytes"))
+
+    def put(self, rid: int, entry) -> None:
+        if not isinstance(entry, dict) or "kv" not in entry:
+            entry = {"kv": entry}      # bare-pytree compat (pre-entry API)
+        entry = dict(entry)
+        entry["kv"] = jax.tree_util.tree_map(np.asarray, entry["kv"])
+        if rid in self.pages:
+            old = self.pages.pop(rid)
+            self.bytes -= self._entry_bytes(old)
+            if self.on_evict is not None:
+                self.on_evict(rid, old)
+        self.pages[rid] = entry
+        self.bytes += self._entry_bytes(entry)
+        self._evict()
 
     def get(self, rid: int):
-        return self.pages.get(rid)
+        entry = self.pages.get(rid)
+        if entry is not None:
+            self.pages.move_to_end(rid)
+        return entry
+
+    def _evict(self) -> None:
+        if self.budget_bytes is None:
+            return
+        while self.bytes > self.budget_bytes and self.pages:
+            rid, old = self.pages.popitem(last=False)
+            self.bytes -= self._entry_bytes(old)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(rid, old)
 
 
 class ServingEngine:
@@ -66,33 +148,126 @@ class ServingEngine:
 
     def __init__(self, params, cfg: ModelConfig, rc: RunConfig, *,
                  n_slots: int = 4, max_seq: int = 512,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 prefill_chunk: int = 32,
+                 store_budget_bytes: Optional[int] = 256 << 20,
+                 legacy_host_path: bool = False,
+                 sync_prefill: bool = False):
         self.params = params
         self.cfg = cfg
         self.rc = rc
         self.n_slots = n_slots
         self.max_seq = max_seq
         self.temperature = temperature
+        self.prefill_chunk = max(1, min(prefill_chunk, max_seq))
+        self.legacy = legacy_host_path
+        self.sync_prefill = sync_prefill
         self.key = jax.random.PRNGKey(seed)
         self.pspecs = shlib.param_specs(
             jax.eval_shape(lambda: params), tier=rc.param_tier,
             multi_pod_fsdp=rc.mesh.multi_pod)
+        # Device-resident hot path: when the pool tier is degenerate (the
+        # FSDP axes have size 1, so the SR "gather" fetches nothing) the
+        # infer-mode prefetch-buffer rotation is pure per-tick overhead —
+        # drop it and unroll the short layer scan. The legacy path keeps
+        # the caller's rc untouched (it is the measured pre-rewrite
+        # baseline).
+        self._hot_rc = rc
+        if not legacy_host_path and rc.sr_prefetch_depth \
+                and _fsdp_axis_size() == 1:
+            self._hot_rc = dataclasses.replace(
+                rc, sr_prefetch_depth=0,
+                scan_unroll=rc.scan_unroll or min(M.n_stacked(cfg), 8))
         self.cache = M.cache_init(cfg, rc, n_slots, max_seq=max_seq)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.qos = QoSController()
-        self.store = HostPageStore()
-        self.flusher = ds.StagingFlusher(
-            sink=lambda rid, kv: self.store.put(rid, kv), qos=self.qos)
-        self.step_fn = jax.jit(self._step)
+        self.store = HostPageStore(budget_bytes=store_budget_bytes,
+                                   on_evict=self._drop_prompt_alias)
+        self._prompt_index: Dict[Tuple[int, ...], int] = {}
+        self.flusher = ds.StagingFlusher(sink=self._store_sink, qos=self.qos)
+        # device-resident tick state (new path)
+        self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
+        self._pos_host = [0] * n_slots      # mirror of cache["pos"]
+        self._tick = 0                      # decode ticks executed
+        self._trace: Dict[int, jax.Array] = {}      # tick -> [n_slots] toks
+        self._trace_np: Dict[int, np.ndarray] = {}  # memoized transfers
+        # jitted hot-path entry points (traced lazily on first use). The
+        # batch cache is donated: nothing on the host ever re-reads an old
+        # cache, and aliasing in/out buffers saves a full cache copy per
+        # tick (last_tokens/key are NOT donated — the token trace keeps
+        # handles to old tick outputs until retirement).
+        self.step_fn = jax.jit(self._step)                  # legacy decode
+        self._decode_fn = jax.jit(self._decode_sample, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(self._prefill_chunk_body,
+                                   donate_argnums=(1,), static_argnums=(8,))
         self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                      "flushes": 0}
+                      "flushes": 0, "prefill_dispatches": 0,
+                      "decode_dispatches": 0, "prefix_hits": 0,
+                      "prefill_time_s": 0.0, "store_bytes": 0,
+                      "store_evictions": 0}
 
-    # ----------------------------------------------------------- step fn
+    # ----------------------------------------------------------- step fns
     def _step(self, params, cache, tokens):
         return M.decode_step(params, self.cfg, self.rc, tokens, cache,
                              self.pspecs)
+
+    def _decode_sample(self, params, cache, last_tokens, key):
+        """One fused decode tick: step every slot + sample on device."""
+        if self.cfg.family == "audio":
+            toks = jnp.broadcast_to(
+                last_tokens[:, None, None],
+                (self.n_slots, self.cfg.n_codebooks, 1))
+        else:
+            toks = last_tokens[:, None]
+        logits, cache = M.decode_step(params, self.cfg, self._hot_rc, toks,
+                                      cache, self.pspecs)
+        row = M.last_token_logits(logits)
+        if self.temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = M.sample_tokens(row, sub, self.temperature)
+        else:
+            nxt = M.sample_tokens(row, None, 0.0)
+        return cache, nxt, key
+
+    def _prefill_chunk_body(self, params, cache, tokens, slot, pos0,
+                            new_pos, last_tokens, key, sample):
+        """One prefill chunk for one slot, entirely in-graph.
+
+        Slices the slot out of the batch cache, pins the slot position to
+        the chunk start (a reused slot's device pos is stale — decode
+        advances every row each tick), runs the chunked cache-writing
+        prefill, and splices the slot back (dynamic_update_slice along
+        each leaf's batch axis). Only the final chunk (``sample=True``,
+        static) samples the last-position token on device — one PRNG
+        split per request, so sampled streams do not depend on the chunk
+        size. Other slots never observe the prefill (continuous-batching
+        isolation).
+        """
+        baxes = self._batch_axes()
+        cache1 = jax.tree_util.tree_map(
+            lambda a, ax: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=ax),
+            cache, baxes)
+        cache1["pos"] = jnp.full((1,), pos0, jnp.int32)
+        logits, cache1 = M.prefill_step_cached(params, self.cfg,
+                                               self._hot_rc, tokens, cache1,
+                                               self.pspecs)
+        cache1["pos"] = jnp.full((1,), new_pos, jnp.int32)
+        cache = jax.tree_util.tree_map(
+            lambda a, a1, ax: jax.lax.dynamic_update_slice_in_dim(
+                a, a1.astype(a.dtype), slot, axis=ax),
+            cache, cache1, baxes)
+        if not sample:
+            return cache
+        row = M.last_token_logits(logits)            # [1, V]
+        if self.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = M.sample_tokens(row, sub, self.temperature)[0]
+        else:
+            tok = M.sample_tokens(row, None, 0.0)[0]
+        last_tokens = last_tokens.at[slot].set(tok)
+        return cache, last_tokens, tok, key
 
     # ------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
@@ -112,11 +287,45 @@ class ServingEngine:
         return self._baxes
 
     def _prefill_slot(self, req: Request, slot: int) -> None:
-        """Isolated single-slot prefill, then splice into the batch cache.
+        """Chunked device-resident prefill: one dispatch per chunk."""
+        prompt = list(req.prompt)
+        if len(prompt) + 1 > self.max_seq:
+            raise ValueError(f"prompt ({len(prompt)} tokens) does not fit "
+                             f"a {self.max_seq}-token slot")
+        c = self.prefill_chunk
+        chunks = [prompt[i:i + c] for i in range(0, len(prompt), c)]
+        pos0, tok = 0, None
+        for i, chunk in enumerate(chunks):
+            arr = np.asarray(chunk, np.int32)[None]          # [1, c]
+            if self.cfg.family == "audio":
+                arr = np.broadcast_to(
+                    arr[:, None],
+                    (1, self.cfg.n_codebooks, len(chunk))).copy()
+            final = i == len(chunks) - 1
+            out = self._prefill_fn(self.params, self.cache,
+                                   jnp.asarray(arr), slot, pos0,
+                                   pos0 + len(chunk), self.last_tokens,
+                                   self.key, final)
+            if final:
+                self.cache, self.last_tokens, tok, self.key = out
+            else:
+                self.cache = out
+            pos0 += len(chunk)
+            self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += len(prompt)
+        self._pos_host[slot] = len(prompt)
+        req._first_tok = tok
+        req._start_tick = self._tick
+        req._n_gen = 1
+        req._n_dec = 0
+        self.stats["decode_tokens"] += 1
+        if self.sync_prefill:
+            tok.block_until_ready()
 
-        Other slots never observe the prefill (continuous-batching
-        isolation); the final prefill logits seed the first sampled token.
-        """
+    def _prefill_slot_legacy(self, req: Request, slot: int) -> None:
+        """Pre-rewrite path: one decode_step dispatch per prompt token on a
+        mini cache, host-side splice, host argmax. Kept as the serve_bench
+        baseline."""
         mini = M.cache_init(self.cfg, self.rc, 1, max_seq=self.max_seq)
         logits = None
         for t in req.prompt:
@@ -125,6 +334,7 @@ class ServingEngine:
                    else jnp.full((1, 1), t, jnp.int32))
             logits, mini = self.step_fn(self.params, mini, tok)
             self.stats["prefill_tokens"] += 1
+            self.stats["prefill_dispatches"] += 1
 
         def splice(dst, src, axis):
             idx = [slice(None)] * dst.ndim
@@ -142,6 +352,56 @@ class ServingEngine:
             req.generated.append(int(row.argmax()))
             self.stats["decode_tokens"] += 1
 
+    # ----------------------------------------------------- prefix restore
+    def _lookup_pages(self, rid: int, prompt: Tuple[int, ...]):
+        """Staging index first (latest-write-wins, the deterministic-store
+        read path), then the cold tier; rid match first, then prompt."""
+        for _, entry in reversed(self.flusher.pending):
+            if isinstance(entry, dict) and entry.get("prompt") == prompt:
+                return entry
+        entry = self.store.get(rid)
+        if entry is not None and entry.get("prompt") == prompt:
+            return entry
+        alias = self._prompt_index.get(prompt)
+        if alias is not None and alias != rid:
+            entry = self.store.get(alias)
+            if entry is not None and entry.get("prompt") == prompt:
+                return entry
+        return None
+
+    def _try_restore(self, req: Request, slot: int) -> bool:
+        """Speculative-read fetch: rebuild the slot from retired pages.
+
+        The stored entry captures the *post-prefill* state — pages plus
+        the prompt's first sampled token at pos=len(prompt) — so a
+        restored request reproduces the prompt-conditioned continuation
+        (greedy-identical to a fresh prefill) rather than extending the
+        previous generation.
+        """
+        if self.cfg.family not in _RESTORABLE_FAMILIES:
+            return False
+        entry = self._lookup_pages(req.rid, tuple(req.prompt))
+        if entry is None or "pos" not in entry or "first_token" not in entry:
+            return False
+        if int(entry["pos"]) >= self.max_seq - 1:
+            return False                      # no room left to decode into
+        first = int(entry["first_token"])
+        kv = jax.tree_util.tree_map(jnp.asarray, entry["kv"])
+        self.cache["kv"] = jax.tree_util.tree_map(
+            lambda a, h: a.at[:, slot].set(h.astype(a.dtype)),
+            self.cache["kv"], kv)
+        self.cache["pos"] = self.cache["pos"].at[slot].set(
+            int(entry["pos"]))
+        self.last_tokens = self.last_tokens.at[slot].set(first)
+        self._pos_host[slot] = int(entry["pos"])
+        req.restored = True
+        req._first_tok = None
+        req._start_tick = self._tick
+        req.generated = req.generated + [first]
+        req._n_gen = 1
+        req._n_dec = 0
+        return True
+
     def _admit(self) -> None:
         for slot in range(self.n_slots):
             if self.slots[slot] is not None or not self.queue:
@@ -149,11 +409,34 @@ class ServingEngine:
             req = self.queue.pop(0)
             req.slot = slot
             self.slots[slot] = req
-            self._prefill_slot(req, slot)
+            t0 = time.perf_counter()
+            if not self.legacy and self._try_restore(req, slot):
+                self.stats["prefix_hits"] += 1
+            elif self.legacy:
+                self._prefill_slot_legacy(req, slot)
+            else:
+                self._prefill_slot(req, slot)
+            self.stats["prefill_time_s"] += time.perf_counter() - t0
 
     # ----------------------------------------------------------- advance
-    def _advance(self) -> Dict[int, int]:
-        """One decode step for every active slot; returns sampled tokens."""
+    def _advance(self) -> None:
+        """One fused decode+sample dispatch; tokens stay on device."""
+        self.cache, self.last_tokens, self.key = self._decode_fn(
+            self.params, self.cache, self.last_tokens, self.key)
+        self.stats["steps"] += 1
+        self.stats["decode_dispatches"] += 1
+        self._trace[self._tick] = self.last_tokens
+        self._tick += 1
+        for slot, req in enumerate(self.slots):
+            self._pos_host[slot] += 1     # decode_step advances every row
+            if req is None:
+                continue
+            req._n_gen += 1
+            req._n_dec += 1
+            self.stats["decode_tokens"] += 1
+
+    def _advance_legacy(self) -> Dict[int, int]:
+        """Pre-rewrite tick: full logits to host, numpy-RNG sampling."""
         toks = np.zeros((self.n_slots, 1), np.int32)
         if self.cfg.family == "audio":
             toks = np.zeros((self.n_slots, self.cfg.n_codebooks, 1),
@@ -166,11 +449,11 @@ class ServingEngine:
                 toks[slot, :, 0] = last
             else:
                 toks[slot, 0] = last
-        t0 = time.time()
         logits, self.cache = self.step_fn(self.params, self.cache,
                                           jnp.asarray(toks))
         logits.block_until_ready()
         self.stats["steps"] += 1
+        self.stats["decode_dispatches"] += 1
         out: Dict[int, int] = {}
         lg = np.asarray(logits.astype(jnp.float32))
         for slot, req in enumerate(self.slots):
@@ -193,21 +476,74 @@ class ServingEngine:
     # -------------------------------------------------------------- run
     def _retire(self, slot: int) -> None:
         """Deterministic store: release the slot immediately; its pages
-        flush to the host tier in the background."""
+        flush to the host tier in the background. The only host transfers
+        on the hot path happen here: the request's sampled tokens and its
+        retiring pages."""
         req = self.slots[slot]
         req.done = True
+        if not self.legacy:
+            toks: List[int] = []
+            if req._first_tok is not None:
+                toks.append(int(np.asarray(req._first_tok)))
+            for t in range(req._start_tick, req._start_tick + req._n_dec):
+                toks.append(int(self._tok_tick(t)[slot]))
+            req.generated = req.generated + toks
+            req._first_tok = None
         kv_slot = jax.tree_util.tree_map(
             lambda a: a[:, slot] if a.ndim > 1 else a[slot],
             self.cache["kv"]) if "kv" in self.cache else None
-        if kv_slot is not None:
-            self.flusher.stage(req.rid, kv_slot)
+        if kv_slot is not None and req.generated:
+            # snapshot the post-prefill state: pages + the prompt's first
+            # sampled token at pos=len(prompt). Pages beyond the prompt
+            # are masked by pos and overwritten as a restored slot decodes.
+            self.flusher.stage(req.rid, {
+                "kv": kv_slot, "pos": len(req.prompt),
+                "first_token": req.generated[0],
+                "prompt": tuple(req.prompt)})
         self.finished.append(req)
         self.slots[slot] = None
 
+    def _tok_tick(self, t: int) -> np.ndarray:
+        """Materialize one tick's [n_slots] sampled tokens, memoized so
+        co-retiring slots share a single transfer."""
+        arr = self._trace_np.get(t)
+        if arr is None:
+            arr = np.asarray(self._trace[t])
+            self._trace_np[t] = arr
+        return arr
+
+    def _prune_trace(self) -> None:
+        """Drop trace entries no live request can still need."""
+        starts = [r._start_tick for r in self.slots if r is not None]
+        if not starts:
+            self._trace.clear()
+            self._trace_np.clear()
+            return
+        low = min(starts)
+        for t in [t for t in self._trace if t < low]:
+            self._trace.pop(t, None)
+            self._trace_np.pop(t, None)
+
+    def _drop_prompt_alias(self, rid: int, entry) -> None:
+        """Keep the prompt->rid index in lockstep with store evictions."""
+        if isinstance(entry, dict):
+            prompt = entry.get("prompt")
+            if prompt is not None and self._prompt_index.get(prompt) == rid:
+                del self._prompt_index[prompt]
+
+    def _store_sink(self, rid: int, entry) -> None:
+        self.store.put(rid, entry)
+        if isinstance(entry, dict) and "prompt" in entry:
+            self._prompt_index[entry["prompt"]] = rid
+
+    def _n_generated(self, req: Request) -> int:
+        return len(req.generated) if self.legacy else req._n_gen
+
     def _check_done(self, slot: int) -> None:
         req = self.slots[slot]
-        pos = int(np.asarray(self.cache["pos"])[slot])
-        if (len(req.generated) >= req.max_new_tokens
+        pos = (int(np.asarray(self.cache["pos"])[slot]) if self.legacy
+               else self._pos_host[slot])
+        if (self._n_generated(req) >= req.max_new_tokens
                 or pos >= self.max_seq - 1):
             self._retire(slot)
 
@@ -216,20 +552,30 @@ class ServingEngine:
         self._admit()
         for slot in range(self.n_slots):
             if self.slots[slot] is not None:
-                self._check_done(slot)     # prefill may already satisfy
+                self._check_done(slot)   # prefill/restore may already satisfy
         if not any(s is not None for s in self.slots):
             return
-        sampled = self._advance()
-        for slot, tok in sampled.items():
-            req = self.slots[slot]
-            req.generated.append(tok)
-            self.stats["decode_tokens"] += 1
-            self._check_done(slot)
+        if self.legacy:
+            sampled = self._advance_legacy()
+            for slot, tok in sampled.items():
+                req = self.slots[slot]
+                req.generated.append(tok)
+                self.stats["decode_tokens"] += 1
+                self._check_done(slot)
+        else:
+            self._advance()
+            for slot in range(self.n_slots):
+                if self.slots[slot] is not None:
+                    self._check_done(slot)
+        if not self.legacy:
+            self._prune_trace()
         # QoS: occupancy = queue pressure; flushes gated by DevLoad
         occ = len(self.flusher.pending) / max(self.n_slots * 2, 1)
         dl = self.qos.classify(occupancy=min(occ, 1.0), service_ratio=1.0)
         self.qos.update(dl)
         self.stats["flushes"] += self.flusher.maybe_flush()
+        self.stats["store_bytes"] = self.store.bytes
+        self.stats["store_evictions"] = self.store.evictions
 
     def run(self, max_ticks: int = 1000) -> List[Request]:
         ticks = 0
@@ -238,4 +584,6 @@ class ServingEngine:
             self.step()
             ticks += 1
         self.flusher.maybe_flush()
+        self.stats["store_bytes"] = self.store.bytes
+        self.stats["store_evictions"] = self.store.evictions
         return self.finished
