@@ -10,10 +10,17 @@ Measures, for the same CPU config and request mix:
  * prefix reuse        — a resubmitted rid must be served via page restore
    with zero prefill dispatches (new path)
 
+``--cxl-tier`` additionally sweeps the CXL-timed memory tier (media bins
+dram / ssd-fast / ssd-slow x SR on/off): the same serving traffic is
+charged against the simulated endpoint and the per-restore stall / SR
+hit rate land in a ``cxl_tier`` section — the first datapoint where the
+paper's SR/DS mechanisms act on real model page traffic.
+
 Emits BENCH_serve.json with both sides + speedups so the perf trajectory
 has a serving datapoint. Run:
 
-  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke --cxl-tier \
+      --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -225,6 +232,86 @@ def bench_pair(params, cfg, rc, *, n_slots: int, max_seq: int,
     return out
 
 
+def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
+                   prompt_len: int, max_new: int, prefill_chunk: int,
+                   seed: int, step_ns: float = 100_000.0):
+    """Sweep the CXL-timed tier over media bins x SR on/off.
+
+    Per scenario: serve a batch (retire -> flush populates the tier),
+    settle the staging ring into the cold tier (the EP may defer flush
+    admission around internal tasks), then resubmit the same prompts —
+    every resubmit restores through a simulated cold-tier fetch whose
+    stall is charged per request. Identical prompts per scenario, so the
+    only variable is the media bin and the SR engine.
+    """
+    from repro.core.tier import CxlTier, TierConfig
+    from repro.serving.engine import Request, ServingEngine
+
+    rng = np.random.default_rng(seed)
+    n_requests = n_slots * 2
+    prompts = [rng.integers(1, cfg.vocab_size, prompt_len).tolist()
+               for _ in range(n_requests)]
+    bins = {}
+    for bin_name in ("dram", "ssd-fast", "ssd-slow"):
+        per = {}
+        for sr in (False, True):
+            tier = CxlTier(TierConfig(media=bin_name, sr_enabled=sr))
+            eng = ServingEngine(params, cfg, rc, n_slots=n_slots,
+                                max_seq=max_seq, temperature=0.0,
+                                seed=seed, prefill_chunk=prefill_chunk,
+                                cxl_tier=tier)
+            _drive(eng, [Request(rid=i, prompt=p, max_new_tokens=max_new)
+                         for i, p in enumerate(prompts)])
+            for _ in range(500):           # settle staging into the tier
+                if not eng.flusher.pending:
+                    break
+                tier.advance(step_ns)
+                eng.stats["flushes"] += eng.flusher.maybe_flush()
+            if eng.flusher.pending:
+                # restores would hit the free staging path and the sweep
+                # would measure the wrong regime — fail loudly instead
+                sys.exit(f"FAIL: cxl-tier staging did not drain into the "
+                         f"cold tier ({bin_name}, sr={sr}, "
+                         f"{len(eng.flusher.pending)} pending)")
+            _drive(eng, [Request(rid=1000 + i, prompt=p,
+                                 max_new_tokens=max_new)
+                         for i, p in enumerate(prompts)])
+            snap = tier.snapshot()
+            hits = eng.stats["prefix_hits"]
+            per["sr_on" if sr else "sr_off"] = {
+                "restores": hits,
+                "restore_stall_ns_total":
+                    round(eng.stats["restore_stall_ns"], 1),
+                "restore_stall_ns_per_restore":
+                    round(eng.stats["restore_stall_ns"] / max(hits, 1), 1),
+                "sr_hit_rate": round(snap["sr_hit_rate"], 4),
+                "sr_prefetch_pages": snap["prefetches"],
+                "flush_write_ns_total": round(snap["write_ns"], 1),
+                "store_queue_occupancy":
+                    round(eng.stats["tier_store_occupancy"], 4),
+                "flushes_deferred": eng.stats["flushes_deferred"],
+                "gc_events": snap["gc_events"],
+                "trace_ops": snap["trace_ops"],
+            }
+        bins[bin_name] = per
+    acceptance = {
+        f"sr_reduces_restore_stall[{b}]":
+            bins[b]["sr_on"]["restore_stall_ns_total"]
+            < bins[b]["sr_off"]["restore_stall_ns_total"]
+        for b in ("ssd-fast", "ssd-slow")}
+    acceptance["all_resubmits_restored"] = all(
+        v["restores"] == n_requests
+        for per in bins.values() for v in per.values())
+    return {
+        "config": {"n_slots": n_slots, "n_requests": n_requests,
+                   "prompt_len": prompt_len, "max_new_tokens": max_new,
+                   "max_seq": max_seq, "tier_step_ns": step_ns,
+                   "seed": seed},
+        "media_bins": bins,
+        "acceptance": acceptance,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -248,6 +335,10 @@ def main(argv=None) -> int:
     ap.add_argument("--repeats", type=int, default=5,
                     help="interleaved timed repetitions per engine "
                          "(median reported; per-run numbers recorded)")
+    ap.add_argument("--cxl-tier", action="store_true",
+                    help="also sweep the CXL-timed tier (media bins "
+                         "dram/ssd-fast/ssd-slow x SR on/off) and emit "
+                         "a cxl_tier section")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -274,6 +365,11 @@ def main(argv=None) -> int:
               repeats=args.repeats)
     with jax.set_mesh(make_host_mesh()):
         pair = bench_pair(params, cfg, rc, **kw)
+        cxl_tier = bench_cxl_tier(
+            params, cfg, rc, n_slots=n_slots, max_seq=max_seq,
+            prompt_len=prompt_len, max_new=min(max_new, 16),
+            prefill_chunk=args.prefill_chunk, seed=args.seed) \
+            if args.cxl_tier else None
     legacy = pair["legacy_host_path"]
     device = pair["device_resident"]
 
@@ -306,13 +402,26 @@ def main(argv=None) -> int:
         "speedup": speedup,
         "acceptance": acceptance,
     }
+    if cxl_tier is not None:
+        out["cxl_tier"] = cxl_tier
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
-    print(json.dumps({"speedup": speedup, "acceptance": acceptance,
-                      "out": args.out}, indent=2))
+    summary = {"speedup": speedup, "acceptance": acceptance,
+               "out": args.out}
+    if cxl_tier is not None:
+        summary["cxl_tier_acceptance"] = cxl_tier["acceptance"]
+        summary["cxl_tier_restore_stall_ns_per_restore"] = {
+            b: {k: v["restore_stall_ns_per_restore"]
+                for k, v in per.items()}
+            for b, per in cxl_tier["media_bins"].items()}
+    print(json.dumps(summary, indent=2))
     if not acceptance["prefix_restore_zero_prefill"]:
         print("FAIL: resubmitted rid was not served via prefix restore",
               file=sys.stderr)
+        return 1
+    if cxl_tier is not None and not all(cxl_tier["acceptance"].values()):
+        print("FAIL: cxl_tier acceptance "
+              f"{cxl_tier['acceptance']}", file=sys.stderr)
         return 1
     return 0
 

@@ -1,11 +1,14 @@
-"""Serving example: continuous batching + tiered KV page lifecycle.
+"""Serving example: continuous batching + CXL-timed KV page lifecycle.
 
 Shows the device-resident hot path (chunked prefill, fused on-device
 sampling), the deterministic-store page retirement (slots free
 immediately, pages flush to the host tier in the background under QoS
 control) and prefix reuse from the cold tier: resubmitted requests are
 restored from retired pages — the speculative-read fetch — with zero
-prefill dispatches.
+prefill dispatches. The attached ``CxlTier`` (Z-NAND media bin) charges
+every page movement against the simulated CXL endpoint, so the example
+also reports how long the restores *would have* stalled on real
+expansion hardware and how much of that the SR engine hid.
 
   PYTHONPATH=src python examples/serve_kv_offload.py
 """
@@ -13,6 +16,7 @@ import jax
 
 from repro.configs import registry
 from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.core.tier import CxlTier, TierConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
@@ -21,10 +25,11 @@ from repro.serving.engine import Request, ServingEngine
 def main():
     cfg = registry.smoke("gemma-2b")
     rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    tier = CxlTier(TierConfig(media="ssd-fast", sr_enabled=True))
     with jax.set_mesh(make_host_mesh()):
         params = M.init_model(jax.random.PRNGKey(0), cfg)
         engine = ServingEngine(params, cfg, rc, n_slots=3, max_seq=64,
-                               prefill_chunk=8)
+                               prefill_chunk=8, cxl_tier=tier)
         for rid in range(7):
             engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
                                   max_new_tokens=8))
@@ -55,6 +60,14 @@ def main():
           f" extra prefill dispatches "
           f"(rids {[r.rid for r in restored]}, "
           f"hits={engine.stats['prefix_hits']})")
+    snap = tier.snapshot()
+    cold = [r for r in restored if r.restore_stall_ns > 0]
+    print(f"cxl tier ({snap['media']}): {snap['writes']} page flushes to "
+          f"the EP, {len(cold)} cold restores stalling "
+          f"{engine.stats['restore_stall_ns'] / 1e3:.0f}us simulated "
+          f"(SR hit rate {snap['sr_hit_rate']:.2f}, "
+          f"{snap['prefetches']} MemSpecRd streams, "
+          f"{engine.stats['flushes_deferred']} flush windows deferred)")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,17 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a recorded dtype name, including the ml_dtypes extended
+    floats (bfloat16, float8_*) numpy itself cannot parse."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 class Checkpointer:
     """Directory layout: <dir>/step_<n>/{manifest.json, leaf_<i>.npy}."""
 
@@ -69,6 +80,11 @@ class Checkpointer:
         manifest = {"step": step, "n_leaves": len(host_leaves),
                     "none_leaves": [i for i, l in enumerate(host_leaves)
                                     if l is None],
+                    # .npy round-trips ml_dtypes extended floats (bf16,
+                    # fp8) as opaque void records — record each leaf's
+                    # true dtype so restore can view the bits back
+                    "dtypes": [None if l is None else str(l.dtype)
+                               for l in host_leaves],
                     "extra": extra}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -113,12 +129,19 @@ class Checkpointer:
         with open(os.path.join(path, "treedef.pkl"), "rb") as f:
             treedef = pickle.load(f)
         none_set = set(manifest["none_leaves"])
+        dtypes = manifest.get("dtypes") or [None] * manifest["n_leaves"]
         leaves = []
         for i in range(manifest["n_leaves"]):
             if i in none_set:
                 leaves.append(None)
                 continue
-            leaves.append(np.load(os.path.join(path, f"leaf_{i}.npy")))
+            arr = np.load(os.path.join(path, f"leaf_{i}.npy"))
+            if dtypes[i] is not None and str(arr.dtype) != dtypes[i]:
+                want = _np_dtype(dtypes[i])
+                # void records are the same bits under the wrong label
+                arr = arr.view(want) if arr.dtype.kind == "V" \
+                    else arr.astype(want)
+            leaves.append(arr)
         state = jax.tree_util.tree_unflatten(treedef, leaves)
         if shardings is not None:
             state = jax.tree_util.tree_map(

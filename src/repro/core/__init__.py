@@ -1,3 +1,17 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# repro.core.tier is the bridge between the two halves: the serving
+# engine's page traffic timed by the repro.sim controller/endpoint
+# model. Re-exported lazily (PEP 562): tier imports repro.sim.engine,
+# whose controller imports repro.core.qos — an eager import here would
+# close that cycle whenever repro.sim loads first.
+
+
+def __getattr__(name):
+    if name in ("CxlTier", "TierConfig"):
+        from repro.core import tier
+
+        return getattr(tier, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

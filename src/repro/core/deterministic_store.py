@@ -132,15 +132,24 @@ class StagingFlusher:
     controller's divert-on-congestion behaviour; suspended writes are kept
     (the ring keeps absorbing) and resumed when load drops — reads remain
     correct throughout because of ``read_through``.
+
+    ``admit`` is the endpoint-side half of the same discipline: when the
+    backing tier is a simulated CXL EP (``repro.core.tier.CxlTier``), the
+    device pre-announces internal tasks / congestion through it and the
+    flush window stays shut until the EP recovers (``deferred`` counts
+    those windows); staged items keep absorbing meanwhile.
     """
 
     def __init__(self, sink: Callable[[int, Any], None],
-                 qos: Optional[QoSController] = None):
+                 qos: Optional[QoSController] = None,
+                 admit: Optional[Callable[[], bool]] = None):
         self.sink = sink
         self.qos = qos or QoSController()
+        self.admit = admit
         self.pending: List[Tuple[int, Any]] = []
         self.flushed = 0
         self.suppressed = 0
+        self.deferred = 0
 
     def stage(self, key: int, value: Any) -> None:
         self.pending.append((key, value))
@@ -148,6 +157,9 @@ class StagingFlusher:
     def maybe_flush(self) -> int:
         if not self.qos.flush_enabled:
             self.suppressed += 1
+            return 0
+        if self.pending and self.admit is not None and not self.admit():
+            self.deferred += 1
             return 0
         n = len(self.pending)
         for key, value in self.pending:

@@ -1,0 +1,184 @@
+"""CXL-timed KV memory tier — serving page traffic through the simulator.
+
+Until now the serving engine's host page tier (``HostPageStore`` + the
+staging flusher) and the siliconized-controller simulator (``repro.sim``)
+lived in separate worlds: the engine moved real KV pages with no latency
+model, the simulator timed synthetic traces with no real traffic. This
+module bridges them: a :class:`CxlTier` owns one simulated CXL endpoint
+(media bin + internal DRAM cache) behind one root port and charges every
+page movement the serving engine performs against it —
+
+ * **flush** (retired pages -> cold tier): ``write_entry`` decomposes the
+   entry into CXL.mem stores through the controller's deterministic-store
+   path — fire-and-forget at GPU-memory speed, diverted to staging under
+   congestion, exactly Fig. 8;
+ * **restore** (prefix reuse): ``read_entry`` is the demand fetch the
+   restored slot stalls on; ``speculative_read`` is the MemSpecRd stream
+   the engine issues at lookup time so the EP's internal DRAM already
+   holds the pages when the demand reads arrive (Fig. 6);
+ * **admission**: ``admit_store`` gates the engine's QoS flusher on the
+   endpoint's announced state (DevLoad ladder + pending internal tasks) —
+   the divert-on-congestion discipline applied at page granularity.
+
+The tier records every op it charges (``ops``/``op_ns``); replaying that
+trace through ``repro.sim.engine.replay_page_trace`` from a fresh stream
+must reproduce the charged latencies — the differential harness in
+``tests/test_tier.py``. Addresses come from an append-only page-aligned
+bump allocator: entry keys map to stable ranges, so a re-flushed entry
+overwrites its previous range (warm EP cache) instead of migrating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.sim.engine import (PAGE_ADVANCE, PAGE_PREFETCH, PAGE_READ,
+                              PAGE_WRITE, PageStream)
+
+# Serving media bins -> simulator media parts (Table 1a). "ssd-fast" is the
+# Z-NAND part, "ssd-slow" commodity TLC NAND; any resolve_media spec
+# ("optane", "znand@2", ...) is also accepted verbatim.
+MEDIA_BINS = {"dram": "dram", "ssd-fast": "znand", "ssd-slow": "nand"}
+
+
+@dataclasses.dataclass(frozen=True)
+class TierConfig:
+    media: str = "ssd-fast"          # bin name or raw media spec
+    sr_enabled: bool = True          # speculative read (MemSpecRd prefetch)
+    ds_enabled: bool = True          # deterministic store (divert + flush)
+    req_bytes: int = 256             # bytes per CXL.mem request in a page op
+    # EP internal DRAM cache. Like media.gc_every_bytes, calibrated to the
+    # simulated working set (a serving run flushes tens-hundreds of KB, vs
+    # GBs through a real EP): small enough that flushed entries age out
+    # before their restore — the regime where SR matters, per the paper.
+    dram_cache_bytes: int = 64 << 10
+    page_bytes: int = 4 << 10        # allocation alignment
+    # op-trace bound: the recorded trace exists for differential replay
+    # (tests/benches, ~100s of ops); a long-lived serving process charges
+    # one advance op per tick, so recording must not grow unboundedly.
+    # Past the cap, ops are still charged but no longer recorded.
+    trace_cap: int = 200_000
+
+    @property
+    def media_name(self) -> str:
+        return MEDIA_BINS.get(self.media, self.media)
+
+
+class CxlTier:
+    """Per-page latency accounting for the serving engine's tiered pages."""
+
+    def __init__(self, config: TierConfig = TierConfig()):
+        self.cfg = config
+        self.stream = PageStream(config.media_name, sr=config.sr_enabled,
+                                 ds=config.ds_enabled,
+                                 req_bytes=config.req_bytes,
+                                 dram_cache_bytes=config.dram_cache_bytes)
+        self._alloc: Dict[object, Tuple[int, int]] = {}  # key -> (base, len)
+        self._base = 0
+        self.ops: List[Tuple[int, int, int]] = []        # (kind, addr, bytes)
+        self.op_ns: List[float] = []                     # charged latencies
+        self.trace_truncated = False     # ops past trace_cap went unrecorded
+        self.counters = {"reads": 0, "writes": 0, "prefetches": 0,
+                         "read_ns": 0.0, "write_ns": 0.0,
+                         "deferred_admits": 0}
+
+    # ------------------------------------------------------------ helpers
+    @staticmethod
+    def entry_bytes(entry) -> int:
+        """Payload bytes of a page-store entry (any pytree-ish value)."""
+        import jax
+
+        return sum(a.nbytes for a in jax.tree_util.tree_leaves(entry)
+                   if hasattr(a, "nbytes"))
+
+    def _range(self, key, nbytes: int) -> Tuple[int, int]:
+        """Stable page-aligned range for ``key`` (grown ranges relocate)."""
+        nbytes = max(int(nbytes), 1)
+        cur = self._alloc.get(key)
+        if cur is not None and cur[1] >= nbytes:
+            return cur[0], nbytes
+        pg = self.cfg.page_bytes
+        length = -(-nbytes // pg) * pg
+        base = self._base
+        self._base += length
+        self._alloc[key] = (base, length)
+        return base, nbytes
+
+    def _charge(self, kind: int, addr: int, nbytes: int) -> float:
+        lat = self.stream.op(kind, addr, nbytes)
+        if len(self.ops) < self.cfg.trace_cap:
+            self.ops.append((kind, addr, nbytes))
+            self.op_ns.append(lat)
+        else:
+            self.trace_truncated = True   # replay would diverge: say so
+        return lat
+
+    # ----------------------------------------------------------- page ops
+    def write_entry(self, key, nbytes: int) -> float:
+        """Flush an entry's pages to the EP; returns writer-held ns."""
+        base, n = self._range(key, nbytes)
+        lat = self._charge(PAGE_WRITE, base, n)
+        self.counters["writes"] += 1
+        self.counters["write_ns"] += lat
+        return lat
+
+    def read_entry(self, key, nbytes: int) -> float:
+        """Demand-fetch an entry's pages; returns the restore stall ns."""
+        base, n = self._range(key, nbytes)
+        lat = self._charge(PAGE_READ, base, n)
+        self.counters["reads"] += 1
+        self.counters["read_ns"] += lat
+        return lat
+
+    def speculative_read(self, key, nbytes: int) -> None:
+        """MemSpecRd the entry's range ahead of the demand fetch."""
+        if not self.cfg.sr_enabled:
+            return
+        base, n = self._range(key, nbytes)
+        self._charge(PAGE_PREFETCH, base, n)
+        self.counters["prefetches"] += 1
+
+    def advance(self, dt_ns: float) -> None:
+        """Idle engine-tick time: background flush / GC windows open."""
+        self._charge(PAGE_ADVANCE, 0, int(dt_ns))
+
+    # ---------------------------------------------------------------- QoS
+    def admit_store(self) -> bool:
+        """Deterministic-store admission for the engine's QoS flusher.
+
+        Flushes wait while the endpoint has announced an imminent internal
+        task or the DevLoad ladder has closed the flush window — the pages
+        keep absorbing into the engine's staging ring (reads stay correct
+        via the staging-index path) and drain once the EP recovers.
+        """
+        ok = self.stream.ctl.qos.flush_enabled \
+            and not self.stream.ep.gc_pending()
+        if not ok:
+            self.counters["deferred_admits"] += 1
+        return ok
+
+    # --------------------------------------------------------------- stats
+    def sr_hit_rate(self) -> float:
+        return self.stream.ep.hit_rate()
+
+    def snapshot(self) -> Dict[str, float]:
+        ep, ctl = self.stream.ep, self.stream.ctl
+        return {
+            "media": ep.media.name,
+            "sr_enabled": self.cfg.sr_enabled,
+            "ds_enabled": self.cfg.ds_enabled,
+            "now_ns": self.stream.now,
+            "reads": self.counters["reads"],
+            "writes": self.counters["writes"],
+            "prefetches": self.counters["prefetches"],
+            "read_ns": self.counters["read_ns"],
+            "write_ns": self.counters["write_ns"],
+            "deferred_admits": self.counters["deferred_admits"],
+            "sr_hit_rate": ep.hit_rate(),
+            "ep_prefetches": ep.stats["prefetches"],
+            "gc_events": ep.stats["gc_events"],
+            "staging_occupancy": len(ctl.staging) / ctl.staging_capacity,
+            "ds": dict(ctl.ds_stats),
+            "trace_ops": len(self.ops),
+            "trace_truncated": self.trace_truncated,
+        }

@@ -2,6 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
       --requests 8
+
+``--cxl-media`` attaches the CXL-timed memory tier: page flushes and
+prefix restores are charged against the simulated endpoint and the
+restore stall / SR hit rate are reported alongside throughput.
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import jax
 
 from repro.configs import registry
 from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.core.tier import CxlTier, TierConfig
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import model as M
 from repro.serving.engine import Request, ServingEngine
@@ -19,14 +24,17 @@ from repro.serving.engine import Request, ServingEngine
 
 def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           n_slots: int = 4, max_seq: int = 128, max_new: int = 12,
-          prompt_len: int = 6, seed: int = 0):
+          prompt_len: int = 6, seed: int = 0,
+          cxl_media: str = "", cxl_sr: bool = True):
     cfg = registry.smoke(arch) if smoke else registry.get(arch)
     mesh = make_host_mesh() if smoke else make_production_mesh()
     rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    tier = CxlTier(TierConfig(media=cxl_media, sr_enabled=cxl_sr)) \
+        if cxl_media else None
     with jax.set_mesh(mesh):
         params = M.init_model(jax.random.PRNGKey(seed), cfg)
         engine = ServingEngine(params, cfg, rc, n_slots=n_slots,
-                               max_seq=max_seq)
+                               max_seq=max_seq, cxl_tier=tier)
         import numpy as np
         rng = np.random.default_rng(seed)
         for rid in range(n_requests):
@@ -47,6 +55,17 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           f"{len(engine.store.pages)} retired caches "
           f"({engine.store.bytes / 1024:.0f} KiB, "
           f"{engine.store.evictions} evictions)")
+    if tier is not None:
+        snap = tier.snapshot()
+        print(f"[serve] cxl tier ({snap['media']}, "
+              f"SR {'on' if cxl_sr else 'off'}): "
+              f"{snap['writes']} page flushes "
+              f"({snap['write_ns'] / 1e3:.0f}us held), "
+              f"{snap['reads']} cold restores stalling "
+              f"{engine.stats['restore_stall_ns'] / 1e3:.0f}us total, "
+              f"SR hit rate {snap['sr_hit_rate']:.2f}, "
+              f"{engine.stats['flushes_deferred']} flush windows deferred "
+              f"by the EP, {snap['gc_events']} internal tasks")
     return engine, finished
 
 
@@ -57,9 +76,15 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--cxl-media", default="",
+                    help="attach the CXL-timed tier: dram / ssd-fast / "
+                         "ssd-slow (or any sim media spec, e.g. znand@2)")
+    ap.add_argument("--cxl-sr-off", action="store_true",
+                    help="disable the speculative-read engine on the tier")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-          n_slots=args.slots, max_new=args.max_new)
+          n_slots=args.slots, max_new=args.max_new,
+          cxl_media=args.cxl_media, cxl_sr=not args.cxl_sr_off)
 
 
 if __name__ == "__main__":

@@ -261,7 +261,8 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                            new_v: jnp.ndarray, pos: jnp.ndarray, *,
                            batch_axes, page_axes,
                            kv_block: int = 2048,
-                           logit_softcap: float = 0.0):
+                           logit_softcap: float = 0.0,
+                           force_shard_map: bool = False):
     """Distributed flash-decode over a page-sharded KV cache (shard_map).
 
     q: [B,1,H,D]; new_k/new_v: [B,1,Hkv,D]; pages: [B,P,page,Hkv,D] with
@@ -272,6 +273,11 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     partials combine with one tiny pmax/psum pair over ``page_axes`` — the
     cross-root-port read combine. Returns (o [B,1,H,D], k_pages',
     v_pages').
+
+    ``force_shard_map`` disables the single-rank fast path so the
+    shard_map body runs even on degenerate (size-1) axes — the two paths
+    must be numerically identical, and the differential parity suite
+    exercises exactly that.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -301,7 +307,8 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     # overhead — write the new KV with one contiguous per-row
     # dynamic_update_slice and run the flash-decode directly (identical
     # math; the serving decode tick is latency-critical)
-    if _axes_size(page_axes) <= 1 and _axes_size(batch_axes) <= 1:
+    if not force_shard_map and _axes_size(page_axes) <= 1 \
+            and _axes_size(batch_axes) <= 1:
         hkv_ = k_pages.shape[3]
         smax = k_pages.shape[1] * k_pages.shape[2]
         pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))

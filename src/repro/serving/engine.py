@@ -14,6 +14,14 @@ The paper's storage-expansion loop, at request granularity:
  * QoS — per-step telemetry drives the same DevLoad machine the training
    driver and the simulator use; under congestion flushes pause and the
    prefetch window narrows.
+ * CXL timing — with a ``repro.core.tier.CxlTier`` attached, every page
+   movement is charged against the simulated endpoint: restores stall for
+   the demand fetch (hidden by the MemSpecRd issued at enqueue time),
+   flushes ride the deterministic-store path, and the EP's announced
+   state (DevLoad / internal tasks) gates the flusher's admission window.
+   Per-request stalls land on ``Request.restore_stall_ns``; aggregates in
+   ``engine.stats`` (restore_stall_ns, tier_sr_hit_rate,
+   tier_store_occupancy, flushes_deferred).
 
 The hot path is device-resident:
 
@@ -51,6 +59,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import deterministic_store as ds
 from repro.core.qos import DevLoad, QoSController
+from repro.core.tier import CxlTier
 from repro.models import model as M
 from repro.parallel import sharding as shlib
 
@@ -64,6 +73,8 @@ class Request:
     done: bool = False
     slot: Optional[int] = None
     restored: bool = False          # served via prefix restore (no prefill)
+    restore_stall_ns: float = 0.0   # simulated CXL fetch stall (cold-tier
+                                    # restore through the CxlTier, else 0)
     # device-resident bookkeeping: the sampled-token handle plus this
     # request's tick range in the engine trace; the host only materializes
     # tokens at retirement (one [n_slots] transfer per tick, memoized
@@ -96,7 +107,12 @@ class HostPageStore:
     entries until the store fits; ``get`` refreshes recency. ``bytes`` and
     ``evictions`` are surfaced through the engine stats. ``on_evict`` is
     called for every dropped or replaced entry so side indexes (the
-    engine's prompt->rid alias map) stay bounded too.
+    engine's prompt->rid alias map) stay bounded too. ``put`` reports
+    whether the entry survived admission: budget pressure can evict an
+    entry during its own insert (a re-staged rid growing past the budget,
+    or any oversized entry), and indexing such an entry would leak — the
+    eviction callback for it has already fired by the time ``put``
+    returns.
     """
 
     def __init__(self, budget_bytes: Optional[int] = None, on_evict=None):
@@ -107,12 +123,12 @@ class HostPageStore:
         self.bytes = 0
         self.evictions = 0
 
-    @staticmethod
-    def _entry_bytes(entry) -> int:
-        return sum(a.nbytes for a in jax.tree_util.tree_leaves(entry)
-                   if hasattr(a, "nbytes"))
+    # one canonical pytree-size helper for the whole page path: the tier
+    # charges the same byte counts this budget is accounted in
+    _entry_bytes = staticmethod(CxlTier.entry_bytes)
 
-    def put(self, rid: int, entry) -> None:
+    def put(self, rid: int, entry) -> bool:
+        """Insert/replace; returns True iff ``rid`` survived admission."""
         if not isinstance(entry, dict) or "kv" not in entry:
             entry = {"kv": entry}      # bare-pytree compat (pre-entry API)
         entry = dict(entry)
@@ -125,6 +141,7 @@ class HostPageStore:
         self.pages[rid] = entry
         self.bytes += self._entry_bytes(entry)
         self._evict()
+        return rid in self.pages
 
     def get(self, rid: int):
         entry = self.pages.get(rid)
@@ -152,7 +169,9 @@ class ServingEngine:
                  prefill_chunk: int = 32,
                  store_budget_bytes: Optional[int] = 256 << 20,
                  legacy_host_path: bool = False,
-                 sync_prefill: bool = False):
+                 sync_prefill: bool = False,
+                 cxl_tier: Optional[CxlTier] = None,
+                 tier_step_ns: float = 100_000.0):
         self.params = params
         self.cfg = cfg
         self.rc = rc
@@ -183,10 +202,17 @@ class ServingEngine:
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.qos = QoSController()
+        # CXL-timed tier: every page movement below is charged against the
+        # simulated endpoint (restore stall, flush cost, SR prefetch), and
+        # the EP's announced state gates the flusher's admission window.
+        self.tier = cxl_tier
+        self.tier_step_ns = tier_step_ns
         self.store = HostPageStore(budget_bytes=store_budget_bytes,
                                    on_evict=self._drop_prompt_alias)
         self._prompt_index: Dict[Tuple[int, ...], int] = {}
-        self.flusher = ds.StagingFlusher(sink=self._store_sink, qos=self.qos)
+        self.flusher = ds.StagingFlusher(
+            sink=self._store_sink, qos=self.qos,
+            admit=self.tier.admit_store if self.tier is not None else None)
         # device-resident tick state (new path)
         self.last_tokens = jnp.zeros((n_slots,), jnp.int32)
         self._pos_host = [0] * n_slots      # mirror of cache["pos"]
@@ -206,7 +232,16 @@ class ServingEngine:
                       "flushes": 0, "prefill_dispatches": 0,
                       "decode_dispatches": 0, "prefix_hits": 0,
                       "prefill_time_s": 0.0, "store_bytes": 0,
-                      "store_evictions": 0}
+                      "store_evictions": 0,
+                      # CXL-tier accounting (all zero without a tier):
+                      # simulated ns the restore path stalled on cold-tier
+                      # fetches / the flusher held on EP writes, the EP's
+                      # SR hit rate, DS staging-stack fill, and flush
+                      # windows the EP deferred (QoS admission).
+                      "restore_stall_ns": 0.0, "tier_write_ns": 0.0,
+                      "tier_sr_hit_rate": 0.0,
+                      "tier_store_occupancy": 0.0, "flush_backlog": 0,
+                      "flushes_deferred": 0}
 
     # ----------------------------------------------------------- step fns
     def _step(self, params, cache, tokens):
@@ -271,6 +306,16 @@ class ServingEngine:
 
     # ------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
+        # Speculative read at enqueue time: if this request's pages sit in
+        # the cold tier, pre-share the addresses with the EP (MemSpecRd)
+        # now — admission happens ticks later, so the fill runs ahead of
+        # the demand fetch the restore will stall on.
+        if self.tier is not None and not self.legacy \
+                and self.cfg.family in _RESTORABLE_FAMILIES:
+            key = self._store_key(req.rid, tuple(req.prompt))
+            if key is not None:
+                self.tier.speculative_read(
+                    key, CxlTier.entry_bytes(self.store.pages[key]))
         self.queue.append(req)
 
     def _batch_axes(self):
@@ -353,21 +398,41 @@ class ServingEngine:
             self.stats["decode_tokens"] += 1
 
     # ----------------------------------------------------- prefix restore
+    def _store_key(self, rid: int, prompt: Tuple[int, ...]) -> Optional[int]:
+        """Cold-tier key holding pages for (rid, prompt), else None.
+
+        A probe, not a use: reads ``store.pages`` directly so queue-time
+        SR lookups do not perturb LRU recency."""
+        entry = self.store.pages.get(rid)
+        if entry is not None and entry.get("prompt") == prompt:
+            return rid
+        alias = self._prompt_index.get(prompt)
+        if alias is not None:
+            entry = self.store.pages.get(alias)
+            if entry is not None and entry.get("prompt") == prompt:
+                return alias
+        return None
+
     def _lookup_pages(self, rid: int, prompt: Tuple[int, ...]):
         """Staging index first (latest-write-wins, the deterministic-store
-        read path), then the cold tier; rid match first, then prompt."""
+        read path), then the cold tier; rid match first, then prompt.
+
+        Returns ``(entry, store_key, source)``: source "staging" is the
+        read-through path (reserved GPU memory — no CXL fetch to charge),
+        source "store" is a cold-tier hit whose demand fetch the restore
+        stalls on (charged against the CxlTier when one is attached)."""
         for _, entry in reversed(self.flusher.pending):
             if isinstance(entry, dict) and entry.get("prompt") == prompt:
-                return entry
+                return entry, None, "staging"
         entry = self.store.get(rid)
         if entry is not None and entry.get("prompt") == prompt:
-            return entry
+            return entry, rid, "store"
         alias = self._prompt_index.get(prompt)
         if alias is not None and alias != rid:
             entry = self.store.get(alias)
             if entry is not None and entry.get("prompt") == prompt:
-                return entry
-        return None
+                return entry, alias, "store"
+        return None, None, None
 
     def _try_restore(self, req: Request, slot: int) -> bool:
         """Speculative-read fetch: rebuild the slot from retired pages.
@@ -380,11 +445,19 @@ class ServingEngine:
         """
         if self.cfg.family not in _RESTORABLE_FAMILIES:
             return False
-        entry = self._lookup_pages(req.rid, tuple(req.prompt))
+        entry, key, source = self._lookup_pages(req.rid, tuple(req.prompt))
         if entry is None or "pos" not in entry or "first_token" not in entry:
             return False
         if int(entry["pos"]) >= self.max_seq - 1:
             return False                      # no room left to decode into
+        if self.tier is not None and source == "store":
+            # the speculative-read fetch: the slot stalls for the simulated
+            # CXL demand reads (fast when the queue-time MemSpecRd already
+            # filled the EP's internal DRAM). Staging hits stay free — the
+            # deterministic store keeps those pages in reserved GPU memory.
+            stall = self.tier.read_entry(key, CxlTier.entry_bytes(entry))
+            req.restore_stall_ns = stall
+            self.stats["restore_stall_ns"] += stall
         first = int(entry["first_token"])
         kv = jax.tree_util.tree_map(jnp.asarray, entry["kv"])
         self.cache["kv"] = jax.tree_util.tree_map(
@@ -532,8 +605,17 @@ class ServingEngine:
                 del self._prompt_index[prompt]
 
     def _store_sink(self, rid: int, entry) -> None:
-        self.store.put(rid, entry)
-        if isinstance(entry, dict) and "prompt" in entry:
+        if self.tier is not None:
+            # the background drain: page writes ride the deterministic-
+            # store path (GPU-speed completion, divert under congestion)
+            self.stats["tier_write_ns"] += self.tier.write_entry(
+                rid, CxlTier.entry_bytes(entry))
+        kept = self.store.put(rid, entry)
+        # alias only entries that survived admission: budget pressure can
+        # evict an entry during its own put (oversized, or a re-staged rid
+        # growing past the budget), and its on_evict has already fired —
+        # indexing it afterwards would leak a dangling prompt alias
+        if kept and isinstance(entry, dict) and "prompt" in entry:
             self._prompt_index[entry["prompt"]] = rid
 
     def _n_generated(self, req: Request) -> int:
@@ -574,8 +656,21 @@ class ServingEngine:
         dl = self.qos.classify(occupancy=min(occ, 1.0), service_ratio=1.0)
         self.qos.update(dl)
         self.stats["flushes"] += self.flusher.maybe_flush()
+        self._tier_tick()
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions
+
+    def _tier_tick(self) -> None:
+        """Advance simulated time one engine tick and surface tier state."""
+        self.stats["flush_backlog"] = len(self.flusher.pending)
+        if self.tier is None:
+            return
+        self.tier.advance(self.tier_step_ns)
+        ctl = self.tier.stream.ctl
+        self.stats["tier_sr_hit_rate"] = self.tier.sr_hit_rate()
+        self.stats["tier_store_occupancy"] = \
+            len(ctl.staging) / ctl.staging_capacity
+        self.stats["flushes_deferred"] = self.flusher.deferred
 
     def run(self, max_ticks: int = 1000) -> List[Request]:
         ticks = 0
@@ -584,6 +679,7 @@ class ServingEngine:
             self.step()
             ticks += 1
         self.flusher.maybe_flush()
+        self._tier_tick()
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions
         return self.finished

@@ -234,3 +234,120 @@ def category_mean(results: Dict[str, float], category: str) -> float:
     names = [n for n, s in wl.TABLE_1B.items() if s.category == category]
     vals = [results[n] for n in names if n in results]
     return float(np.mean(vals)) if vals else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# Single-stream page timing (the serving tier's front-end)
+# ---------------------------------------------------------------------------
+#
+# The serving engine moves KV pages, not 64B cache lines: a retired slot's
+# pages flush to the expansion tier, a prefix restore pulls them back. The
+# PageStream below is the reusable timing API both sides of that traffic
+# share — one root port + EP (the same silicon model the trace engine
+# drives) serving a *blocking* single request stream: the restore path
+# stalls the slot until its pages arrive, so one outstanding page op is
+# the faithful GPU-side model.
+
+PAGE_ADVANCE = 0      # idle time passing between engine ticks (nbytes = ns)
+PAGE_READ = 1         # demand page read (restore fetch)
+PAGE_WRITE = 2        # page writeback (flush to the cold tier)
+PAGE_PREFETCH = 3     # MemSpecRd stream for an upcoming restore
+
+
+class PageStream:
+    """Blocking single-stream page timing over one root port + EP.
+
+    ``repro.core.tier.CxlTier`` charges the serving engine's page traffic
+    against this API incrementally; :func:`replay_page_trace` replays a
+    recorded page trace against a fresh instance — the scalar oracle the
+    tier's online accounting is differentially tested against.
+
+    Each page op is decomposed into ``req_bytes``-spaced CXL.mem requests
+    issued back-to-back (the next request leaves when the previous one
+    completes). Reads go through ``RootPortController.load`` — so SR
+    window generation, ring dedup and DevLoad telemetry all engage;
+    writes go through ``RootPortController.store`` — deterministic stores
+    complete at GPU-memory speed and divert to staging under congestion;
+    prefetches stream straight to the EP's internal DRAM (the MemSpecRd
+    fill), off the critical path, honoring the QoS halt state.
+    """
+
+    def __init__(self, media: str = "znand", *, sr: bool = True,
+                 ds: bool = True, req_bytes: int = 256,
+                 dram_cache_bytes: int = 8 << 20):
+        self.ep = Endpoint(resolve_media(media),
+                           dram_cache_bytes=dram_cache_bytes)
+        self.ctl = RootPortController(self.ep,
+                                      sr_mode="sr" if sr else "off",
+                                      ds_enabled=ds)
+        self.req_bytes = int(req_bytes)
+        self.now = 0.0
+        self.prefetch_pages = 0
+        self.prefetch_halted = 0
+
+    def read(self, addr: int, nbytes: int) -> float:
+        """Demand-read a page span; returns the stall (ns) until it lands."""
+        t = self.now
+        for a in range(addr, addr + nbytes, self.req_bytes):
+            t = self.ctl.load(t, a)
+        lat = t - self.now
+        self.now = t
+        return lat
+
+    def write(self, addr: int, nbytes: int) -> float:
+        """Write a page span; returns the time (ns) the writer is held."""
+        t = self.now
+        for a in range(addr, addr + nbytes, self.req_bytes):
+            t = self.ctl.store(t, a)
+        lat = t - self.now
+        self.now = t
+        return lat
+
+    def prefetch(self, addr: int, nbytes: int) -> float:
+        """Issue the MemSpecRd stream for a span; free on the demand path."""
+        if self.ctl.sr_mode == "off" or self.ep.is_dram:
+            return 0.0
+        if self.ctl.qos.sr_halted:
+            self.prefetch_halted += 1
+            return 0.0
+        self.prefetch_pages += 1
+        self.ep.prefetch(self.now, addr, nbytes)
+        return 0.0
+
+    def advance(self, dt_ns: float) -> float:
+        """Idle time between engine ticks: background flush windows open,
+        announced internal tasks (GC) get their quiet window, and the
+        periodic DevLoad sample keeps the QoS ladder live — without it a
+        closed flush window could never reopen (no stores -> no response
+        flits -> no telemetry), deadlocking the divert discipline."""
+        self.now += dt_ns
+        self.ctl.qos.update(self.ep.devload(self.now))
+        self.ctl.background_flush(self.now)
+        return 0.0
+
+    def op(self, kind: int, addr: int, nbytes: int) -> float:
+        """Dispatch one recorded page op (the replay entry point)."""
+        if kind == PAGE_READ:
+            return self.read(addr, nbytes)
+        if kind == PAGE_WRITE:
+            return self.write(addr, nbytes)
+        if kind == PAGE_PREFETCH:
+            return self.prefetch(addr, nbytes)
+        if kind == PAGE_ADVANCE:
+            return self.advance(float(nbytes))
+        raise ValueError(f"unknown page-op kind {kind}")
+
+
+def replay_page_trace(ops, *, media: str = "znand", sr: bool = True,
+                      ds: bool = True, req_bytes: int = 256,
+                      dram_cache_bytes: int = 8 << 20) -> np.ndarray:
+    """Scalar-oracle replay of a recorded page trace.
+
+    ``ops`` is an iterable of ``(kind, addr, nbytes)`` tuples (the
+    ``CxlTier.ops`` recording). Returns the per-op latencies of a fresh
+    :class:`PageStream` walking the same trace — the cross-validation
+    oracle for the tier's incremental accounting.
+    """
+    stream = PageStream(media, sr=sr, ds=ds, req_bytes=req_bytes,
+                        dram_cache_bytes=dram_cache_bytes)
+    return np.asarray([stream.op(k, a, n) for k, a, n in ops], np.float64)

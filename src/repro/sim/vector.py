@@ -1070,3 +1070,44 @@ def run(config: str, workload: str, media_name="dram", *,
                       store_q=store_q, trace=trace)
     out.workload = workload
     return out
+
+
+# ---------------------------------------------------------------------------
+# Closed-form page-trace latencies (DRAM-class EP)
+# ---------------------------------------------------------------------------
+
+def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
+                           req_bytes: int = 256) -> np.ndarray:
+    """Closed-form per-op latencies for a blocking single-stream page trace
+    on a DRAM-class EP — the vectorized cross-check for the serving tier's
+    ``dram`` media bin.
+
+    Valid because a *blocking* stream on a DRAM EP never queues: every
+    demand request finds its transaction slot and channel free (the next
+    request only issues after the previous one returned, and fire-and-
+    forget writes complete EP-side before the stream's clock catches up),
+    so each 64B CXL.mem request costs exactly
+
+        read:   CXL_RTT + read_ns + xfer(64B)
+        write:  GPU_MEM_NS              (deterministic store, dual write)
+                CXL_RTT + write_ns + xfer(64B)   (ds disabled)
+
+    and a page op of ``ceil(nbytes / req_bytes)`` requests is that many
+    multiples. Prefetch and advance ops are free on the demand path (SR
+    never engages on a DRAM EP). Raises ``ValueError`` for media with
+    internal tasks — those need the event loop, not a closed form.
+    """
+    media = resolve_media(media_name)
+    if media.gc_every_bytes != 0 or media.read_ns >= 100:
+        raise ValueError(f"{media.name}: closed form needs a DRAM-class EP")
+    kinds = np.asarray([k for k, _, _ in ops], np.int64)
+    nbytes = np.asarray([n for _, _, n in ops], np.int64)
+    n_reqs = -(-nbytes // req_bytes)
+    line = 64                      # CXL.mem request granularity (MemRd)
+    read_req = CXL_RTT_NS + media.read_ns + media.xfer_ns(line)
+    write_req = GPU_MEM_NS if ds \
+        else CXL_RTT_NS + media.write_ns + media.xfer_ns(line)
+    lat = np.zeros(len(kinds), np.float64)
+    lat[kinds == se.PAGE_READ] = (n_reqs * read_req)[kinds == se.PAGE_READ]
+    lat[kinds == se.PAGE_WRITE] = (n_reqs * write_req)[kinds == se.PAGE_WRITE]
+    return lat

@@ -1,0 +1,134 @@
+"""Round-trip coverage for the two previously untested persistence paths:
+the async sharded checkpointer and the int8+error-feedback compressor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.optim import compression as C
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "w": jax.random.normal(k, (8, 16), jnp.float32),
+        "b": np.arange(16, dtype=np.float32),
+        "nested": {"m": jnp.ones((4,), jnp.bfloat16), "skip": None},
+    }
+
+
+def _assert_tree_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert [p for p, _ in la] == [p for p, _ in lb]
+    for (_, x), (_, y) in zip(la, lb):
+        # float32 view: bf16 numpy arrays lack the `equal` ufunc here
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+# ------------------------------------------------------------ checkpointer
+
+def test_checkpoint_round_trip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=3)
+    state = _state()
+    ckpt.save(7, state, extra={"lr": 0.1}, blocking=True)
+    step, restored, extra = ckpt.restore()
+    assert step == 7 and extra == {"lr": 0.1}
+    _assert_tree_equal(state, restored)
+    assert restored["nested"]["skip"] is None       # None leaves survive
+
+
+def test_checkpoint_async_commit_and_latest(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=3)
+    ckpt.save(1, _state(1))          # async: returns before the write
+    ckpt.wait()
+    assert ckpt.latest_step() == 1
+    assert os.path.exists(os.path.join(str(tmp_path), "step_1",
+                                       "manifest.json"))
+    # no half-written .tmp dirs after the atomic rename
+    assert not [d for d in os.listdir(str(tmp_path)) if d.startswith(".tmp")]
+
+
+def test_checkpoint_keep_gc_and_specific_step(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+    states = {s: _state(s) for s in (1, 2, 3, 4)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, states[s], blocking=True)
+    assert ckpt.steps() == [3, 4]                   # keep=2 pruned 1, 2
+    step, restored, _ = ckpt.restore(3)             # explicit older step
+    assert step == 3
+    _assert_tree_equal(states[3], restored)
+
+
+def test_checkpoint_restore_empty_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Checkpointer(str(tmp_path)).restore()
+
+
+def test_checkpoint_elastic_restore_resharding(tmp_path):
+    """`shardings` re-places restored leaves via device_put (the elastic
+    path); device-committed arrays must equal the host originals."""
+    ckpt = Checkpointer(str(tmp_path))
+    state = {"w": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    ckpt.save(0, state, blocking=True)
+    dev = jax.devices()[0]
+    _, restored, _ = ckpt.restore(shardings={"w": dev})
+    assert isinstance(restored["w"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+
+
+# ------------------------------------------------------------ compression
+
+def test_quantize_dequantize_exact_on_grid():
+    """Values already on the int8 grid (scale * {-127..127}) round-trip
+    exactly: encode/decode identity where the codec is lossless."""
+    rng = np.random.default_rng(0)
+    scale = 0.037
+    x = jnp.asarray(rng.integers(-127, 128, size=(7, 64)) * scale,
+                    jnp.float32)
+    q, s = C._quantize(x)
+    out = C._dequantize(q, s, x.shape, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_error_feedback_identity():
+    """The EF invariant that makes compression unbiased over steps:
+    decompressed + new_residual == gradient + old_residual, exactly."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((5, 300)), jnp.float32)  # pads
+    residual = jnp.asarray(rng.standard_normal((5, 300)) * 0.01,
+                           jnp.float32)
+    deq, new_residual = C.compress_leaf(g, residual)
+    np.testing.assert_allclose(np.asarray(deq) + np.asarray(new_residual),
+                               np.asarray(g) + np.asarray(residual),
+                               rtol=1e-6, atol=1e-6)
+    # quantization error is bounded by half a step per block
+    step = np.abs(np.asarray(g) + np.asarray(residual)).max() / 127.0
+    assert np.abs(np.asarray(new_residual)).max() <= step
+
+
+def test_compress_grads_treewise_and_residual_init():
+    params = {"a": jnp.ones((3, 256)), "b": {"c": jnp.ones((130,))}}
+    res = C.init_residuals(params)
+    assert all(float(jnp.abs(r).max()) == 0.0
+               for r in jax.tree_util.tree_leaves(res))
+    grads = jax.tree_util.tree_map(
+        lambda p: p * 0.5, params)
+    out, new_res = C.compress_grads(grads, res)
+    assert jax.tree_util.tree_structure(out) == \
+        jax.tree_util.tree_structure(grads)
+    for g, o in zip(jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(g),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_compressed_bytes_formula():
+    params = {"a": jnp.zeros((256,)), "b": jnp.zeros((300,))}
+    # int8 payload + one fp32 scale per 256-block (300 -> 2 blocks)
+    assert C.compressed_bytes(params) == (256 + 4 * 1) + (300 + 4 * 2)

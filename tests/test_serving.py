@@ -65,6 +65,54 @@ def test_ring_duplicate_key_latest_write_wins_after_wrap():
 
 # ----------------------------------------------------------- HostPageStore
 
+def test_host_page_store_put_reports_admission():
+    """put() returns whether the entry survived: budget pressure can evict
+    an entry during its own insert (stage -> re-stage growing past the
+    budget), and the caller must not index what already left."""
+    kv = {"k": np.zeros((4, 64), np.float32)}   # 1 KiB per entry
+    store = HostPageStore(budget_bytes=2 * kv["k"].nbytes)
+    assert store.put(1, {"kv": kv, "pos": 5, "prompt": (1,)})
+    big = {"k": np.zeros((16, 64), np.float32)}  # 4 KiB > budget
+    assert not store.put(2, {"kv": big, "pos": 5, "prompt": (2,)})
+    assert 2 not in store.pages and 1 not in store.pages  # LRU went first
+    assert store.bytes == 0
+
+
+def test_store_restage_evict_keeps_alias_index_bounded(mesh_ctx):
+    """Regression for the stage -> re-stage -> evict ordering: when a
+    flushed entry is evicted during its own put (or a re-staged rid
+    replaces and then ages out), the prompt->rid alias map must not keep
+    a dangling entry — on_evict fires before the sink used to re-add the
+    alias, leaking one index entry per evicted prompt."""
+    # budget below one smoke entry: every flush self-evicts on insert
+    eng = _make(n_slots=1, max_seq=32, store_budget_bytes=1024)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[rid + 1, 2, 3],
+                           max_new_tokens=2))
+    eng.run(max_ticks=200)
+    assert eng.store.evictions >= 3 and not eng.store.pages
+    assert eng._prompt_index == {}              # the leak
+    assert eng.store.bytes == 0
+
+    # stage -> RE-stage (same rid+prompt retired twice) -> evict by a
+    # later, larger working set: alias entries always point at live pages
+    eng = _make(n_slots=1, max_seq=32, store_budget_bytes=60_000)
+    for _ in range(2):                          # second pass re-stages rid 0
+        eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2))
+        eng.run(max_ticks=100)
+    assert 0 in eng.store.pages
+    for rid in range(1, 5):                     # push rid 0 out via LRU
+        eng.submit(Request(rid=rid, prompt=[rid + 1, 2, 3],
+                           max_new_tokens=2))
+        eng.run(max_ticks=100)
+    assert eng.store.evictions >= 1
+    live = set(eng.store.pages)
+    assert set(eng._prompt_index.values()) <= live
+    assert eng.store.bytes == sum(
+        eng.store._entry_bytes(e) for e in eng.store.pages.values())
+    assert eng.store.bytes <= 60_000
+
+
 def test_host_page_store_lru_eviction_and_bytes():
     kv = {"k": np.zeros((4, 64), np.float32)}   # 1 KiB per entry
     store = HostPageStore(budget_bytes=3 * kv["k"].nbytes)
