@@ -10,11 +10,15 @@ Measures, for the same CPU config and request mix:
  * prefix reuse        — a resubmitted rid must be served via page restore
    with zero prefill dispatches (new path)
 
-``--cxl-tier`` additionally sweeps the CXL-timed memory tier (media bins
-dram / ssd-fast / ssd-slow x SR on/off): the same serving traffic is
-charged against the simulated endpoint and the per-restore stall / SR
-hit rate land in a ``cxl_tier`` section — the first datapoint where the
-paper's SR/DS mechanisms act on real model page traffic.
+``--cxl-tier`` additionally sweeps the CXL-timed memory tier: media bins
+(dram / ssd-fast / ssd-slow x SR on/off) and the multi-root-port
+**topology axis** (1-port baseline vs 2-/3-port heterogeneous topologies
+x placement policy). The same serving traffic is charged against the
+simulated endpoints; per-restore stall / SR hit rate / per-port stats
+land in a ``cxl_tier`` section with acceptance gates that SR-on beats
+SR-off per bin, that multi-port overlap strictly reduces aggregate
+restore stall vs the 1-port baseline, and that every (port-tagged) op
+trace replays within 1% of the scalar oracle.
 
 Emits BENCH_serve.json with both sides + speedups so the perf trajectory
 has a serving datapoint. Run:
@@ -34,6 +38,73 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 import numpy as np
+
+# Canonical BENCH_serve.json schema, section by section. This is the
+# single source of truth three consumers pin against:
+#  * main() fails if the emitted JSON drifts from it (check_schema),
+#  * tools/check_docs.py fails if the schema table in
+#    docs/ARCHITECTURE.md drifts from it (the CI docs job),
+#  * downstream artifact readers can import it.
+SCHEMA_KEYS = {
+    "top": ("bench", "arch", "config", "legacy_host_path",
+            "device_resident", "speedup", "acceptance", "cxl_tier"),
+    "engine": ("prefill_tok_s", "decode_tok_s", "prefill_tok_s_best",
+               "decode_tok_s_best", "prefill_tokens_per_run",
+               "decode_tokens_per_run", "prefill_dispatches_per_run",
+               "decode_dispatches_per_run", "p50_tick_ms", "p99_tick_ms",
+               "runs", "store_bytes", "store_evictions"),
+    "device_extra": ("resubmit_prefill_dispatches", "prefix_hits",
+                     "prefix_hit_rate"),
+    "cxl_tier": ("config", "media_bins", "topology", "acceptance"),
+    "tier_scenario": ("restores", "restore_stall_ns_total",
+                      "restore_stall_ns_per_restore", "sr_hit_rate",
+                      "sr_prefetch_pages", "flush_write_ns_total",
+                      "store_queue_occupancy", "flushes_deferred",
+                      "gc_events", "trace_ops"),
+    "topology_extra": ("ports", "promotions", "demotions",
+                       "replay_within_1pct"),
+}
+
+
+def check_schema(out) -> list:
+    """Compare an emitted BENCH_serve.json dict against SCHEMA_KEYS.
+
+    Returns a list of drift messages (empty when the artifact matches);
+    every key set is compared exactly, both directions, so adding or
+    removing an emitted key without updating SCHEMA_KEYS (and the docs
+    table checked against it) fails the bench.
+    """
+    errs = []
+
+    def diff(where, got, want):
+        got, want = set(got), set(want)
+        if got != want:
+            errs.append(f"{where}: +{sorted(got - want)} "
+                        f"-{sorted(want - got)}")
+
+    top = set(SCHEMA_KEYS["top"])
+    if "cxl_tier" not in out:
+        top.discard("cxl_tier")
+    diff("top-level", out, top)
+    if "legacy_host_path" in out:
+        diff("legacy_host_path", out["legacy_host_path"],
+             SCHEMA_KEYS["engine"])
+    if "device_resident" in out:
+        diff("device_resident", out["device_resident"],
+             SCHEMA_KEYS["engine"] + SCHEMA_KEYS["device_extra"])
+    tier = out.get("cxl_tier")
+    if tier is not None:
+        diff("cxl_tier", tier, SCHEMA_KEYS["cxl_tier"])
+        for b, per in tier.get("media_bins", {}).items():
+            for mode, scen in per.items():
+                diff(f"media_bins[{b}][{mode}]", scen,
+                     SCHEMA_KEYS["tier_scenario"])
+        for t, per in tier.get("topology", {}).items():
+            for mode, scen in per.items():
+                diff(f"topology[{t}][{mode}]", scen,
+                     SCHEMA_KEYS["tier_scenario"]
+                     + SCHEMA_KEYS["topology_extra"])
+    return errs
 
 
 def _build(arch: str, seed: int, vocab: int, dtype: str):
@@ -80,7 +151,8 @@ def _drive(eng, requests, *, max_ticks: int = 10_000):
 
 def _reset_stats(eng):
     for k, v in eng.stats.items():
-        eng.stats[k] = 0.0 if isinstance(v, float) else 0
+        eng.stats[k] = [] if isinstance(v, list) else \
+            0.0 if isinstance(v, float) else 0
 
 
 def _timed_pass(eng, reqs, n_requests, max_new):
@@ -232,68 +304,148 @@ def bench_pair(params, cfg, rc, *, n_slots: int, max_seq: int,
     return out
 
 
+def _tier_scenario(params, cfg, rc, tier, prompts, *, n_slots, max_seq,
+                   max_new, prefill_chunk, seed, step_ns, label):
+    """Serve -> settle -> resubmit against one tier; return its metrics.
+
+    Serve a batch (retire -> flush populates the tier), settle the
+    staging ring into the cold tier (the EPs may defer flush admission
+    around internal tasks), then resubmit the same prompts — every
+    resubmit restores through a simulated cold-tier fetch whose stall is
+    charged per request. Identical prompts across scenarios, so the only
+    variables are the tier's topology/media/placement and the SR engine.
+    """
+    from repro.serving.engine import Request, ServingEngine
+
+    eng = ServingEngine(params, cfg, rc, n_slots=n_slots, max_seq=max_seq,
+                        temperature=0.0, seed=seed,
+                        prefill_chunk=prefill_chunk, cxl_tier=tier)
+    _drive(eng, [Request(rid=i, prompt=p, max_new_tokens=max_new)
+                 for i, p in enumerate(prompts)])
+    for _ in range(500):               # settle staging into the tier
+        if not eng.flusher.pending:
+            break
+        tier.advance(step_ns)
+        eng.stats["flushes"] += eng.flusher.maybe_flush()
+    if eng.flusher.pending:
+        # restores would hit the free staging path and the sweep would
+        # measure the wrong regime — fail loudly instead
+        sys.exit(f"FAIL: cxl-tier staging did not drain into the cold "
+                 f"tier ({label}, {len(eng.flusher.pending)} pending)")
+    _drive(eng, [Request(rid=1000 + i, prompt=p, max_new_tokens=max_new)
+                 for i, p in enumerate(prompts)])
+    snap = tier.snapshot()
+    hits = eng.stats["prefix_hits"]
+    return {
+        "restores": hits,
+        "restore_stall_ns_total":
+            round(eng.stats["restore_stall_ns"], 1),
+        "restore_stall_ns_per_restore":
+            round(eng.stats["restore_stall_ns"] / max(hits, 1), 1),
+        "sr_hit_rate": round(snap["sr_hit_rate"], 4),
+        "sr_prefetch_pages": snap["prefetches"],
+        "flush_write_ns_total": round(snap["write_ns"], 1),
+        "store_queue_occupancy":
+            round(eng.stats["tier_store_occupancy"], 4),
+        "flushes_deferred": eng.stats["flushes_deferred"],
+        "gc_events": snap["gc_events"],
+        "trace_ops": snap["trace_ops"],
+    }
+
+
+def _replay_ok(tier) -> bool:
+    """Differential gate: replay the tier's recorded (possibly
+    port-tagged) op trace through the scalar oracle; True when the
+    charged latencies reproduce within 1%."""
+    from repro.sim.engine import replay_page_trace
+
+    oracle = replay_page_trace(
+        tier.ops,
+        media=tier.cfg.media_name,
+        topology=tier.cfg.port_medias if tier.cfg.tagged else None,
+        sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
+        req_bytes=tier.cfg.req_bytes,
+        dram_cache_bytes=tier.cfg.dram_cache_bytes)
+    return bool(np.allclose(np.asarray(tier.op_ns), oracle,
+                            rtol=0.01, atol=1e-6))
+
+
+# topology axis: 1-port baseline vs multi-port heterogeneous topologies
+# (overlapping per-port lanes) x placement policy. Each scenario runs
+# SR on and (for the striped set) SR off on identical traffic.
+TOPOLOGIES = {
+    "1-port": {"topology": ("ssd-fast",), "placement": "striped"},
+    # homogeneous pair: same media as the baseline, so any stall
+    # reduction is attributable to per-port overlap alone (the hetero
+    # scenario below would also win just from the faster DRAM lane)
+    "2-port-ssd": {"topology": ("ssd-fast", "ssd-fast"),
+                   "placement": "striped"},
+    "2-port-hetero": {"topology": ("dram", "ssd-fast"),
+                      "placement": "striped"},
+    "3-port-hetero": {"topology": ("dram", "ssd-fast", "ssd-slow"),
+                      "placement": "striped"},
+    "3-port-hashed": {"topology": ("dram", "ssd-fast", "ssd-slow"),
+                      "placement": "hashed"},
+    "3-port-hotness": {"topology": ("dram", "ssd-fast", "ssd-slow"),
+                       "placement": "hotness"},
+}
+
+
 def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
                    prompt_len: int, max_new: int, prefill_chunk: int,
                    seed: int, step_ns: float = 100_000.0):
-    """Sweep the CXL-timed tier over media bins x SR on/off.
+    """Sweep the CXL-timed tier: media bins x SR, then the topology axis.
 
-    Per scenario: serve a batch (retire -> flush populates the tier),
-    settle the staging ring into the cold tier (the EP may defer flush
-    admission around internal tasks), then resubmit the same prompts —
-    every resubmit restores through a simulated cold-tier fetch whose
-    stall is charged per request. Identical prompts per scenario, so the
-    only variable is the media bin and the SR engine.
+    Section 1 (``media_bins``) is the single-port sweep (dram / ssd-fast
+    / ssd-slow x SR on/off). Section 2 (``topology``) sweeps multi-root-
+    port topologies x placement policy on the same traffic, with the
+    acceptance gate that multi-port overlap strictly reduces aggregate
+    restore stall vs the 1-port baseline, and that every port-tagged op
+    trace replays within 1% of the scalar oracle.
     """
     from repro.core.tier import CxlTier, TierConfig
-    from repro.serving.engine import Request, ServingEngine
 
     rng = np.random.default_rng(seed)
     n_requests = n_slots * 2
     prompts = [rng.integers(1, cfg.vocab_size, prompt_len).tolist()
                for _ in range(n_requests)]
+    kw = dict(n_slots=n_slots, max_seq=max_seq, max_new=max_new,
+              prefill_chunk=prefill_chunk, seed=seed, step_ns=step_ns)
+
     bins = {}
     for bin_name in ("dram", "ssd-fast", "ssd-slow"):
         per = {}
         for sr in (False, True):
             tier = CxlTier(TierConfig(media=bin_name, sr_enabled=sr))
-            eng = ServingEngine(params, cfg, rc, n_slots=n_slots,
-                                max_seq=max_seq, temperature=0.0,
-                                seed=seed, prefill_chunk=prefill_chunk,
-                                cxl_tier=tier)
-            _drive(eng, [Request(rid=i, prompt=p, max_new_tokens=max_new)
-                         for i, p in enumerate(prompts)])
-            for _ in range(500):           # settle staging into the tier
-                if not eng.flusher.pending:
-                    break
-                tier.advance(step_ns)
-                eng.stats["flushes"] += eng.flusher.maybe_flush()
-            if eng.flusher.pending:
-                # restores would hit the free staging path and the sweep
-                # would measure the wrong regime — fail loudly instead
-                sys.exit(f"FAIL: cxl-tier staging did not drain into the "
-                         f"cold tier ({bin_name}, sr={sr}, "
-                         f"{len(eng.flusher.pending)} pending)")
-            _drive(eng, [Request(rid=1000 + i, prompt=p,
-                                 max_new_tokens=max_new)
-                         for i, p in enumerate(prompts)])
-            snap = tier.snapshot()
-            hits = eng.stats["prefix_hits"]
-            per["sr_on" if sr else "sr_off"] = {
-                "restores": hits,
-                "restore_stall_ns_total":
-                    round(eng.stats["restore_stall_ns"], 1),
-                "restore_stall_ns_per_restore":
-                    round(eng.stats["restore_stall_ns"] / max(hits, 1), 1),
-                "sr_hit_rate": round(snap["sr_hit_rate"], 4),
-                "sr_prefetch_pages": snap["prefetches"],
-                "flush_write_ns_total": round(snap["write_ns"], 1),
-                "store_queue_occupancy":
-                    round(eng.stats["tier_store_occupancy"], 4),
-                "flushes_deferred": eng.stats["flushes_deferred"],
-                "gc_events": snap["gc_events"],
-                "trace_ops": snap["trace_ops"],
-            }
+            per["sr_on" if sr else "sr_off"] = _tier_scenario(
+                params, cfg, rc, tier, prompts,
+                label=f"{bin_name}/sr={sr}", **kw)
         bins[bin_name] = per
+
+    topo = {}
+    replay_within_1pct = True
+    for name, spec in TOPOLOGIES.items():
+        per = {}
+        sr_modes = (False, True) if spec["placement"] == "striped" \
+            else (True,)
+        for sr in sr_modes:
+            tier = CxlTier(TierConfig(topology=spec["topology"],
+                                      placement=spec["placement"],
+                                      sr_enabled=sr))
+            res = _tier_scenario(params, cfg, rc, tier, prompts,
+                                 label=f"{name}/sr={sr}", **kw)
+            res["ports"] = [
+                {k: p[k] for k in ("port", "media", "ep_reads",
+                                   "ep_writes", "sr_hit_rate",
+                                   "live_bytes", "gc_events")}
+                for p in tier.port_stats()]
+            res["promotions"] = tier.counters["promotions"]
+            res["demotions"] = tier.counters["demotions"]
+            res["replay_within_1pct"] = _replay_ok(tier)
+            replay_within_1pct &= res["replay_within_1pct"]
+            per["sr_on" if sr else "sr_off"] = res
+        topo[name] = per
+
     acceptance = {
         f"sr_reduces_restore_stall[{b}]":
             bins[b]["sr_on"]["restore_stall_ns_total"]
@@ -301,13 +453,28 @@ def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
         for b in ("ssd-fast", "ssd-slow")}
     acceptance["all_resubmits_restored"] = all(
         v["restores"] == n_requests
-        for per in bins.values() for v in per.values())
+        for per in bins.values() for v in per.values()) and all(
+        v["restores"] == n_requests
+        for per in topo.values() for v in per.values())
+    # the tentpole gates: per-port lanes overlapping inside each restore
+    # must strictly beat the serialized single-port stream on the same
+    # traffic. The homogeneous pair isolates overlap (identical media,
+    # so only lane concurrency can reduce stall); the heterogeneous pair
+    # is the paper's DRAM+SSD configuration (overlap + a faster lane).
+    acceptance["multi_port_overlap_reduces_stall"] = (
+        topo["2-port-ssd"]["sr_on"]["restore_stall_ns_total"]
+        < topo["1-port"]["sr_on"]["restore_stall_ns_total"])
+    acceptance["hetero_2port_beats_1port"] = (
+        topo["2-port-hetero"]["sr_on"]["restore_stall_ns_total"]
+        < topo["1-port"]["sr_on"]["restore_stall_ns_total"])
+    acceptance["topology_replay_within_1pct"] = replay_within_1pct
     return {
         "config": {"n_slots": n_slots, "n_requests": n_requests,
                    "prompt_len": prompt_len, "max_new_tokens": max_new,
                    "max_seq": max_seq, "tier_step_ns": step_ns,
                    "seed": seed},
         "media_bins": bins,
+        "topology": topo,
         "acceptance": acceptance,
     }
 
@@ -404,6 +571,12 @@ def main(argv=None) -> int:
     }
     if cxl_tier is not None:
         out["cxl_tier"] = cxl_tier
+    schema_drift = check_schema(out)
+    if schema_drift:
+        print("FAIL: BENCH_serve.json schema drifted from "
+              "serve_bench.SCHEMA_KEYS:\n  " + "\n  ".join(schema_drift),
+              file=sys.stderr)
+        return 1
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
     summary = {"speedup": speedup, "acceptance": acceptance,
@@ -414,6 +587,9 @@ def main(argv=None) -> int:
             b: {k: v["restore_stall_ns_per_restore"]
                 for k, v in per.items()}
             for b, per in cxl_tier["media_bins"].items()}
+        summary["cxl_tier_topology_stall_ns"] = {
+            t: per["sr_on"]["restore_stall_ns_total"]
+            for t, per in cxl_tier["topology"].items()}
     print(json.dumps(summary, indent=2))
     if not acceptance["prefix_restore_zero_prefill"]:
         print("FAIL: resubmitted rid was not served via prefix restore",

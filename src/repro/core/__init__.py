@@ -1,15 +1,19 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
-#
-# repro.core.tier is the bridge between the two halves: the serving
-# engine's page traffic timed by the repro.sim controller/endpoint
-# model. Re-exported lazily (PEP 562): tier imports repro.sim.engine,
-# whose controller imports repro.core.qos — an eager import here would
-# close that cycle whenever repro.sim loads first.
+"""JAX-runtime analogues of the paper's mechanisms (the SYSTEM half).
+
+HDM placement (``hdm``), speculative read (``speculative_read``),
+deterministic store (``deterministic_store``), the DevLoad QoS machine
+(``qos``) and the CXL-timed serving memory tier (``tier``).
+
+``repro.core.tier`` is the bridge between the two halves: the serving
+engine's page traffic timed by the ``repro.sim`` controller/endpoint
+model. Re-exported lazily (PEP 562): tier imports repro.sim.engine,
+whose controller imports repro.core.qos — an eager import here would
+close that cycle whenever repro.sim loads first.
+"""
 
 
 def __getattr__(name):
+    """Lazy re-export of the tier API (see module docstring)."""
     if name in ("CxlTier", "TierConfig"):
         from repro.core import tier
 

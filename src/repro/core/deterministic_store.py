@@ -70,6 +70,7 @@ class RingState:
 
 
 def ring_init(n_slots: int, item_shape: Any) -> RingState:
+    """Fresh ring of ``n_slots`` zeroed slots shaped like ``item_shape``."""
     slots = jax.tree_util.tree_map(
         lambda s: jnp.zeros((n_slots,) + tuple(s.shape), s.dtype), item_shape)
     return RingState(slots=slots,
@@ -116,6 +117,7 @@ def read_through(state: RingState, key: jnp.ndarray, backing: Any) -> Any:
 
 
 def ring_occupancy(state: RingState) -> jnp.ndarray:
+    """Ring fill fraction in [0, 1] (the QoS occupancy signal)."""
     return state.count.astype(jnp.float32) / state.keys.shape[0]
 
 
@@ -152,9 +154,12 @@ class StagingFlusher:
         self.deferred = 0
 
     def stage(self, key: int, value: Any) -> None:
+        """Park one item for the next admitted flush window."""
         self.pending.append((key, value))
 
     def maybe_flush(self) -> int:
+        """Drain pending items to the sink if QoS + admission allow;
+        returns how many items were flushed (0 on a closed window)."""
         if not self.qos.flush_enabled:
             self.suppressed += 1
             return 0

@@ -49,6 +49,8 @@ class HDMStore:
         return shlib.gathered_specs(self.specs(params_shape))
 
     def shardings(self, params_shape: Any) -> Any:
+        """NamedShardings realizing the tier map on the mesh (HOST tier
+        adds the pinned_host memory kind when enabled)."""
         mk = None
         if self.tier == HOST and self.enable_host_tier:
             mk = "pinned_host"

@@ -92,7 +92,13 @@ class QoSController:
 
     @property
     def sr_enabled(self) -> bool:
+        """True while the SR engine may issue MemSpecRd (not halted)."""
         return not self.sr_halted
+
+    @property
+    def last_devload(self) -> DevLoad:
+        """Most recent DevLoad sample observed (telemetry read-back)."""
+        return self._last
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +151,9 @@ def address_window(addr: int, granularity: int,
 
 @dataclasses.dataclass
 class StepTelemetry:
+    """One training/serving step's observed load (wall times in seconds;
+    ``staging_occupancy`` is the DS ring fill fraction in [0, 1])."""
+
     step: int
     wall_time_s: float
     expected_time_s: float      # roofline expectation for the variant
@@ -165,6 +174,8 @@ class RuntimeQoS:
         self.history: List[StepTelemetry] = []
 
     def observe(self, t: StepTelemetry) -> Tuple[int, int]:
+        """Fold one step's telemetry into the ladder; returns the
+        (prefetch_depth, granularity) variant to run next."""
         ratio = (t.wall_time_s / t.expected_time_s
                  if t.expected_time_s > 0 else 1.0)
         dl = self.ctl.classify(t.staging_occupancy, ratio)
@@ -174,6 +185,8 @@ class RuntimeQoS:
         return self.active_variant()
 
     def active_variant(self) -> Tuple[int, int]:
+        """Pre-compiled (depth, granularity) variant closest to the
+        controller's current prefetch depth."""
         depth = 0 if self.ctl.sr_halted else self.ctl.prefetch_depth
         best = min(self.variants,
                    key=lambda v: (abs(v[0] - depth),))

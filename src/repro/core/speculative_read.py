@@ -41,6 +41,7 @@ def _tree_index(stacked: Any, i) -> Any:
 
 
 def strip_stack_axis(specs: Any) -> Any:
+    """Per-layer specs from stacked specs (drop the leading layer axis)."""
     from jax.sharding import PartitionSpec as P
     return jax.tree_util.tree_map(
         lambda s: P(*tuple(s)[1:]), specs,

@@ -4,46 +4,104 @@ Until now the serving engine's host page tier (``HostPageStore`` + the
 staging flusher) and the siliconized-controller simulator (``repro.sim``)
 lived in separate worlds: the engine moved real KV pages with no latency
 model, the simulator timed synthetic traces with no real traffic. This
-module bridges them: a :class:`CxlTier` owns one simulated CXL endpoint
-(media bin + internal DRAM cache) behind one root port and charges every
-page movement the serving engine performs against it —
+module bridges them: a :class:`CxlTier` owns a simulated CXL **topology**
+— one or more root ports, each fronting its own endpoint (media bin +
+internal DRAM cache) — and charges every page movement the serving
+engine performs against it:
 
  * **flush** (retired pages -> cold tier): ``write_entry`` decomposes the
-   entry into CXL.mem stores through the controller's deterministic-store
-   path — fire-and-forget at GPU-memory speed, diverted to staging under
-   congestion, exactly Fig. 8;
+   entry into CXL.mem stores through each port controller's
+   deterministic-store path — fire-and-forget at GPU-memory speed,
+   diverted to staging under congestion, exactly Fig. 8;
  * **restore** (prefix reuse): ``read_entry`` is the demand fetch the
    restored slot stalls on; ``speculative_read`` is the MemSpecRd stream
    the engine issues at lookup time so the EP's internal DRAM already
    holds the pages when the demand reads arrive (Fig. 6);
  * **admission**: ``admit_store`` gates the engine's QoS flusher on the
-   endpoint's announced state (DevLoad ladder + pending internal tasks) —
+   endpoints' announced state (DevLoad ladder + pending internal tasks) —
    the divert-on-congestion discipline applied at page granularity.
+
+**Multi-root-port topology** (the paper's headline system design —
+"multiple CXL root ports for integrating diverse storage media"): with
+``TierConfig.topology`` set to N media bins, a *placement policy* maps
+each entry onto the ports:
+
+ * ``striped`` — pages round-robin across every port, so one entry's
+   demand fetch fans out and the restore stalls only for the slowest
+   lane (per-port clocks overlap in simulated time; the topology drains
+   at engine-tick barriers);
+ * ``hashed``  — whole entries pinned to one port by a stable key hash
+   (overlap comes from concurrent entries landing on distinct ports);
+ * ``hotness`` — restore-frequency-weighted: entries start on the
+   capacity (SSD) ports and hot entries promote to the DRAM port, with
+   budget-driven demotion of the coldest resident back to the slowest
+   port (ICGMM-style placement across a heterogeneous expansion tier).
 
 The tier records every op it charges (``ops``/``op_ns``); replaying that
 trace through ``repro.sim.engine.replay_page_trace`` from a fresh stream
+(or fresh :class:`~repro.sim.engine.Topology` for port-tagged traces)
 must reproduce the charged latencies — the differential harness in
-``tests/test_tier.py``. Addresses come from an append-only page-aligned
-bump allocator: entry keys map to stable ranges, so a re-flushed entry
-overwrites its previous range (warm EP cache) instead of migrating.
+``tests/test_tier.py`` / ``tests/test_topology.py``. Addresses come from
+per-port append-only page-aligned bump allocators: entry keys map to
+stable port segments, so a re-flushed entry overwrites its previous
+ranges (warm EP caches) instead of migrating; only the ``hotness``
+policy relocates entries, explicitly, charging the migration traffic.
+
+All times are simulated nanoseconds.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Tuple
 
 from repro.sim.engine import (PAGE_ADVANCE, PAGE_PREFETCH, PAGE_READ,
-                              PAGE_WRITE, PageStream)
+                              PAGE_WRITE, Topology)
+from repro.sim.media import resolve_media
 
 # Serving media bins -> simulator media parts (Table 1a). "ssd-fast" is the
 # Z-NAND part, "ssd-slow" commodity TLC NAND; any resolve_media spec
 # ("optane", "znand@2", ...) is also accepted verbatim.
 MEDIA_BINS = {"dram": "dram", "ssd-fast": "znand", "ssd-slow": "nand"}
 
+PLACEMENTS = ("striped", "hashed", "hotness")
+
+
+def resolve_bin(spec: str) -> str:
+    """Map a serving bin name to a simulator media spec.
+
+    Accepts a bin name (``"ssd-fast"``), a raw media spec (``"znand"``),
+    or either with a latency multiplier (``"ssd-fast@2"`` -> ``"znand@2"``)
+    — the multiplier survives the bin mapping so scaled bins time
+    consistently end to end.
+    """
+    name, sep, mult = spec.partition("@")
+    base = MEDIA_BINS.get(name, name)
+    return f"{base}@{mult}" if sep else base
+
+
+def _stable_hash(key) -> int:
+    """Deterministic (cross-run) placement hash: blake2b of ``repr(key)``.
+
+    Not the builtin ``hash`` (salted per process — placement would move
+    between runs) and not crc32 (badly biased modulo small port counts
+    for short keys like small ints).
+    """
+    return int.from_bytes(
+        hashlib.blake2b(repr(key).encode(), digest_size=8).digest(), "big")
+
 
 @dataclasses.dataclass(frozen=True)
 class TierConfig:
-    media: str = "ssd-fast"          # bin name or raw media spec
+    """Configuration for a :class:`CxlTier` (all latencies simulated ns).
+
+    ``media`` names the single-port media bin; setting ``topology`` to a
+    tuple of bins instead builds a multi-root-port tier and activates the
+    ``placement`` policy. An empty ``topology`` is exactly the
+    pre-topology single-port tier (same op trace format, same timing).
+    """
+
+    media: str = "ssd-fast"          # single-port bin name or media spec
     sr_enabled: bool = True          # speculative read (MemSpecRd prefetch)
     ds_enabled: bool = True          # deterministic store (divert + flush)
     req_bytes: int = 256             # bytes per CXL.mem request in a page op
@@ -52,37 +110,81 @@ class TierConfig:
     # GBs through a real EP): small enough that flushed entries age out
     # before their restore — the regime where SR matters, per the paper.
     dram_cache_bytes: int = 64 << 10
-    page_bytes: int = 4 << 10        # allocation alignment
+    page_bytes: int = 4 << 10        # allocation + striping granule
     # op-trace bound: the recorded trace exists for differential replay
     # (tests/benches, ~100s of ops); a long-lived serving process charges
     # one advance op per tick, so recording must not grow unboundedly.
     # Past the cap, ops are still charged but no longer recorded.
     trace_cap: int = 200_000
+    # ---- multi-root-port topology -------------------------------------
+    topology: Tuple[str, ...] = ()   # per-port media bins; () = single-port
+    placement: str = "striped"       # striped | hashed | hotness
+    hot_promote_after: int = 2       # restores before promotion (hotness)
+    hot_budget_bytes: int = 256 << 10   # fast-port residency budget
+
+    def __post_init__(self):
+        """Validate the placement policy name early."""
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {self.placement!r} "
+                             f"(expected one of {PLACEMENTS})")
 
     @property
     def media_name(self) -> str:
-        return MEDIA_BINS.get(self.media, self.media)
+        """Resolved simulator media spec for the single-port bin."""
+        return resolve_bin(self.media)
+
+    @property
+    def port_medias(self) -> Tuple[str, ...]:
+        """Resolved per-port media specs (one entry per root port)."""
+        return tuple(resolve_bin(m) for m in (self.topology or (self.media,)))
+
+    @property
+    def tagged(self) -> bool:
+        """True when the op trace is port-tagged (multi-port mode)."""
+        return bool(self.topology)
 
 
 class CxlTier:
-    """Per-page latency accounting for the serving engine's tiered pages."""
+    """Per-page latency accounting for the serving engine's tiered pages.
+
+    One instance owns a :class:`repro.sim.engine.Topology` (a single port
+    in legacy mode) plus the placement state mapping entry keys onto port
+    segments. All returned latencies are simulated nanoseconds.
+    """
 
     def __init__(self, config: TierConfig = TierConfig()):
         self.cfg = config
-        self.stream = PageStream(config.media_name, sr=config.sr_enabled,
-                                 ds=config.ds_enabled,
-                                 req_bytes=config.req_bytes,
-                                 dram_cache_bytes=config.dram_cache_bytes)
-        self._alloc: Dict[object, Tuple[int, int]] = {}  # key -> (base, len)
-        self._base = 0
-        self.ops: List[Tuple[int, int, int]] = []        # (kind, addr, bytes)
-        self.op_ns: List[float] = []                     # charged latencies
+        self.topo = Topology(config.port_medias, sr=config.sr_enabled,
+                             ds=config.ds_enabled,
+                             req_bytes=config.req_bytes,
+                             dram_cache_bytes=config.dram_cache_bytes)
+        n = self.topo.n_ports
+        # key -> [(port, base, capacity_bytes)] segments, striping order
+        self._segments: Dict[object, List[Tuple[int, int, int]]] = {}
+        self._base = [0] * n             # per-port bump allocators
+        self._live_bytes = [0] * n       # bytes currently mapped per port
+        self._entry_counter = 0          # rotates the striping start port
+        # hotness-policy state
+        self._heat: Dict[object, int] = {}           # restore counts
+        self._fast_resident: Dict[object, int] = {}  # key -> bytes, LRU-ish
+        reads = [resolve_media(m).read_ns for m in config.port_medias]
+        self._fast_port = int(min(range(n), key=lambda i: reads[i]))
+        self._slow_port = int(max(range(n), key=lambda i: reads[i]))
+        self.ops: List[tuple] = []       # (kind,addr,nbytes) or port-tagged
+        self.op_ns: List[float] = []     # charged latencies (ns)
         self.trace_truncated = False     # ops past trace_cap went unrecorded
         self.counters = {"reads": 0, "writes": 0, "prefetches": 0,
                          "read_ns": 0.0, "write_ns": 0.0,
-                         "deferred_admits": 0}
+                         "deferred_admits": 0,
+                         "promotions": 0, "demotions": 0,
+                         "migrate_ns": 0.0}
 
     # ------------------------------------------------------------ helpers
+    @property
+    def stream(self):
+        """Port 0's :class:`PageStream` (the whole tier in legacy mode)."""
+        return self.topo.ports[0]
+
     @staticmethod
     def entry_bytes(entry) -> int:
         """Payload bytes of a page-store entry (any pytree-ish value)."""
@@ -91,23 +193,93 @@ class CxlTier:
         return sum(a.nbytes for a in jax.tree_util.tree_leaves(entry)
                    if hasattr(a, "nbytes"))
 
-    def _range(self, key, nbytes: int) -> Tuple[int, int]:
-        """Stable page-aligned range for ``key`` (grown ranges relocate)."""
-        nbytes = max(int(nbytes), 1)
-        cur = self._alloc.get(key)
-        if cur is not None and cur[1] >= nbytes:
-            return cur[0], nbytes
-        pg = self.cfg.page_bytes
-        length = -(-nbytes // pg) * pg
-        base = self._base
-        self._base += length
-        self._alloc[key] = (base, length)
-        return base, nbytes
+    # --------------------------------------------------------- placement
+    def _stripe_order(self, key) -> List[int]:
+        """Port visit order for a new entry under the active placement."""
+        n = self.topo.n_ports
+        if n == 1:
+            return [0]
+        if self.cfg.placement == "hashed":
+            return [_stable_hash(key) % n]
+        if self.cfg.placement == "hotness":
+            # entries start on the capacity ports; the fast (DRAM) port is
+            # reserved for promoted-hot entries (unless it is the only one)
+            cands = [p for p in range(n) if p != self._fast_port] or [0]
+            return [cands[_stable_hash(key) % len(cands)]]
+        start = self._entry_counter % n          # striped round-robin
+        return [(start + j) % n for j in range(n)]
 
-    def _charge(self, kind: int, addr: int, nbytes: int) -> float:
-        lat = self.stream.op(kind, addr, nbytes)
+    def _allocate(self, key, nbytes: int,
+                  ports: Optional[List[int]] = None
+                  ) -> List[Tuple[int, int, int]]:
+        """Bump-allocate page-aligned segments for ``key`` over ``ports``."""
+        pg = self.cfg.page_bytes
+        npages = -(-nbytes // pg)
+        if ports is None:
+            ports = self._stripe_order(key)
+            self._entry_counter += 1
+        pages = {p: 0 for p in ports}
+        for j in range(npages):
+            pages[ports[j % len(ports)]] += 1
+        segs = []
+        for p in ports:
+            if not pages[p]:
+                continue
+            length = pages[p] * pg
+            segs.append((p, self._base[p], length))
+            self._base[p] += length
+            self._live_bytes[p] += length
+        old = self._segments.get(key)
+        if old is not None:
+            for p, _, length in old:
+                self._live_bytes[p] -= length
+        self._segments[key] = segs
+        # fast-port residency bookkeeping must follow the segments: a
+        # grown entry relocating off the fast port (stripe order picks a
+        # capacity port) is no longer resident there, and leaving it in
+        # _fast_resident would make a later demotion charge its reads on
+        # the wrong port's address space
+        if any(p != self._fast_port for p, _, _ in segs):
+            self._fast_resident.pop(key, None)
+        return segs
+
+    def _place(self, key, nbytes: int) -> List[Tuple[int, int, int]]:
+        """Charged (port, addr, raw_bytes) splits for an entry access.
+
+        Reuses the stored segments when their capacity still covers
+        ``nbytes`` (stable ranges — a re-flushed entry overwrites, warm EP
+        caches); a grown entry relocates. Raw bytes walk the segments in
+        page-granule round-robin so the per-port split is deterministic.
+        """
+        nbytes = max(int(nbytes), 1)
+        segs = self._segments.get(key)
+        if segs is None or sum(c for _, _, c in segs) < nbytes:
+            segs = self._allocate(key, nbytes)
+        pg = self.cfg.page_bytes
+        npages = -(-nbytes // pg)
+        raw = {i: 0 for i in range(len(segs))}
+        cap = {i: c // pg for i, (_, _, c) in enumerate(segs)}
+        j = 0
+        for page in range(npages):
+            size = min(pg, nbytes - page * pg)
+            for _ in range(len(segs)):           # next segment with room
+                if cap[j % len(segs)]:
+                    break
+                j += 1
+            i = j % len(segs)
+            cap[i] -= 1
+            raw[i] += size
+            j += 1
+        return [(p, a, raw[i]) for i, (p, a, _) in enumerate(segs)
+                if raw[i]]
+
+    # ----------------------------------------------------------- charging
+    def _charge(self, port: int, kind: int, addr: int, nbytes: int) -> float:
+        """Execute one op on its port and record it in the trace (ns)."""
+        lat = self.topo.op(port, kind, addr, nbytes)
         if len(self.ops) < self.cfg.trace_cap:
-            self.ops.append((kind, addr, nbytes))
+            self.ops.append((port, kind, addr, nbytes) if self.cfg.tagged
+                            else (kind, addr, nbytes))
             self.op_ns.append(lat)
         else:
             self.trace_truncated = True   # replay would diverge: say so
@@ -115,70 +287,180 @@ class CxlTier:
 
     # ----------------------------------------------------------- page ops
     def write_entry(self, key, nbytes: int) -> float:
-        """Flush an entry's pages to the EP; returns writer-held ns."""
-        base, n = self._range(key, nbytes)
-        lat = self._charge(PAGE_WRITE, base, n)
+        """Flush an entry's pages to its port EPs; returns writer-held ns.
+
+        Segments on distinct ports overlap in simulated time, so the hold
+        is the *slowest lane's* time, not the sum — this is where flushes
+        to distinct ports stop serializing.
+        """
+        held = 0.0
+        for port, addr, n in self._place(key, nbytes):
+            held = max(held, self._charge(port, PAGE_WRITE, addr, n))
         self.counters["writes"] += 1
-        self.counters["write_ns"] += lat
-        return lat
+        self.counters["write_ns"] += held
+        return held
 
     def read_entry(self, key, nbytes: int) -> float:
-        """Demand-fetch an entry's pages; returns the restore stall ns."""
-        base, n = self._range(key, nbytes)
-        lat = self._charge(PAGE_READ, base, n)
+        """Demand-fetch an entry's pages; returns the restore stall (ns).
+
+        The stall is the slowest lane's demand-read time (per-port lanes
+        overlap; each lane serializes on its own port clock). Under the
+        ``hotness`` policy the restore also bumps the entry's heat and may
+        trigger promotion/demotion (charged separately, see
+        :meth:`_rebalance`).
+        """
+        stall = 0.0
+        for port, addr, n in self._place(key, nbytes):
+            stall = max(stall, self._charge(port, PAGE_READ, addr, n))
         self.counters["reads"] += 1
-        self.counters["read_ns"] += lat
-        return lat
+        self.counters["read_ns"] += stall
+        if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
+            self._heat[key] = self._heat.get(key, 0) + 1
+            self._rebalance(key, nbytes)
+        return stall
 
     def speculative_read(self, key, nbytes: int) -> None:
-        """MemSpecRd the entry's range ahead of the demand fetch."""
+        """MemSpecRd the entry's port ranges ahead of the demand fetch."""
         if not self.cfg.sr_enabled:
             return
-        base, n = self._range(key, nbytes)
-        self._charge(PAGE_PREFETCH, base, n)
+        for port, addr, n in self._place(key, nbytes):
+            self._charge(port, PAGE_PREFETCH, addr, n)
         self.counters["prefetches"] += 1
 
     def advance(self, dt_ns: float) -> None:
-        """Idle engine-tick time: background flush / GC windows open."""
-        self._charge(PAGE_ADVANCE, 0, int(dt_ns))
+        """Idle engine-tick time (ns): the topology drains (barrier) and
+        every port sees the idle window — background flush / GC windows
+        open and the QoS ladders stay live."""
+        if self.cfg.tagged:
+            self._charge(-1, PAGE_ADVANCE, 0, int(dt_ns))
+        else:
+            self._charge(0, PAGE_ADVANCE, 0, int(dt_ns))
+
+    # ------------------------------------------------ hotness rebalancing
+    def _rebalance(self, key, nbytes: int) -> None:
+        """Promote a hot entry to the fast port; demote over-budget cold.
+
+        Promotion charges only the write onto the fast port (the entry's
+        pages were just demand-read into GPU memory); each demotion
+        charges a read off the fast port plus a write onto the slowest
+        port. Segments are swapped atomically after the charges, so every
+        key keeps a valid mapping at all times — no entry is ever
+        stranded mid-migration.
+        """
+        if self._fast_port == self._slow_port:
+            return                       # homogeneous topology: nothing to do
+        segs = self._segments.get(key, [])
+        on_fast = all(p == self._fast_port for p, _, _ in segs)
+        if on_fast:
+            self._fast_resident[key] = max(self._fast_resident.get(key, 0),
+                                           int(nbytes))
+            return
+        if self._heat.get(key, 0) < self.cfg.hot_promote_after:
+            return
+        new = self._allocate(key, nbytes, ports=[self._fast_port])
+        for _, addr, cap in new:
+            self.counters["migrate_ns"] += self._charge(
+                self._fast_port, PAGE_WRITE, addr, min(cap, int(nbytes)))
+        self.counters["promotions"] += 1
+        self._fast_resident[key] = int(nbytes)
+        budget = self.cfg.hot_budget_bytes
+        while sum(self._fast_resident.values()) > budget \
+                and len(self._fast_resident) > 1:
+            victim = min((k for k in self._fast_resident if k != key),
+                         key=lambda k: self._heat.get(k, 0))
+            vbytes = self._fast_resident.pop(victim)
+            # charge the pull-back on the segments' actual ports (belt
+            # and braces with the _allocate bookkeeping above: a segment
+            # address is only meaningful on its own port's bump space)
+            for p, addr, cap in self._segments.get(victim, []):
+                self.counters["migrate_ns"] += self._charge(
+                    p, PAGE_READ, addr, min(cap, vbytes))
+            moved = self._allocate(victim, vbytes, ports=[self._slow_port])
+            for _, addr, cap in moved:
+                self.counters["migrate_ns"] += self._charge(
+                    self._slow_port, PAGE_WRITE, addr, min(cap, vbytes))
+            self._heat[victim] = 0       # demoted: re-earn promotion
+            self.counters["demotions"] += 1
 
     # ---------------------------------------------------------------- QoS
     def admit_store(self) -> bool:
         """Deterministic-store admission for the engine's QoS flusher.
 
-        Flushes wait while the endpoint has announced an imminent internal
-        task or the DevLoad ladder has closed the flush window — the pages
-        keep absorbing into the engine's staging ring (reads stay correct
-        via the staging-index path) and drain once the EP recovers.
+        Flushes wait while *any* endpoint has announced an imminent
+        internal task or closed its flush window via the DevLoad ladder —
+        placement may target any port, so admission is the conservative
+        AND across the topology. The pages keep absorbing into the
+        engine's staging ring (reads stay correct via the staging-index
+        path) and drain once every EP recovers.
         """
-        ok = self.stream.ctl.qos.flush_enabled \
-            and not self.stream.ep.gc_pending()
+        ok = all(p.ctl.qos.flush_enabled and not p.ep.gc_pending()
+                 for p in self.topo.ports)
         if not ok:
             self.counters["deferred_admits"] += 1
         return ok
 
     # --------------------------------------------------------------- stats
     def sr_hit_rate(self) -> float:
-        return self.stream.ep.hit_rate()
+        """Aggregate EP internal-DRAM hit rate over the topology's reads."""
+        reads = sum(p.ep.stats["reads"] for p in self.topo.ports)
+        hits = sum(p.ep.stats["hits"] for p in self.topo.ports)
+        return hits / reads if reads else 0.0
 
-    def snapshot(self) -> Dict[str, float]:
-        ep, ctl = self.stream.ep, self.stream.ctl
+    def store_occupancy(self) -> float:
+        """Worst-port DS staging-stack fill fraction (0..1)."""
+        return max(len(p.ctl.staging) / p.ctl.staging_capacity
+                   for p in self.topo.ports)
+
+    def port_stats(self) -> List[Dict[str, object]]:
+        """Per-port telemetry: occupancy, queue depth, DevLoad, SR hits."""
+        out = []
+        for i, p in enumerate(self.topo.ports):
+            ep, ctl = p.ep, p.ctl
+            reads = ep.stats["reads"]
+            out.append({
+                "port": i,
+                "media": ep.media.name,
+                "now_ns": p.now,
+                "live_bytes": self._live_bytes[i],
+                "ep_reads": reads,
+                "ep_writes": ep.stats["writes"],
+                "ep_prefetches": ep.stats["prefetches"],
+                "sr_hit_rate": ep.stats["hits"] / reads if reads else 0.0,
+                "gc_events": ep.stats["gc_events"],
+                "staging_occupancy":
+                    len(ctl.staging) / ctl.staging_capacity,
+                "queue_depth": len(ctl.memory_queue),
+                "devload": int(ctl.qos.last_devload),
+            })
+        return out
+
+    def snapshot(self) -> Dict[str, object]:
+        """One flat dict of tier state for stats lines / bench artifacts."""
+        ports = self.port_stats()
         return {
-            "media": ep.media.name,
+            "media": "+".join(p["media"] for p in ports)
+            if self.cfg.tagged else ports[0]["media"],
+            "topology": list(self.cfg.port_medias),
+            "placement": self.cfg.placement if self.cfg.tagged else None,
             "sr_enabled": self.cfg.sr_enabled,
             "ds_enabled": self.cfg.ds_enabled,
-            "now_ns": self.stream.now,
+            "now_ns": self.topo.now,
             "reads": self.counters["reads"],
             "writes": self.counters["writes"],
             "prefetches": self.counters["prefetches"],
             "read_ns": self.counters["read_ns"],
             "write_ns": self.counters["write_ns"],
             "deferred_admits": self.counters["deferred_admits"],
-            "sr_hit_rate": ep.hit_rate(),
-            "ep_prefetches": ep.stats["prefetches"],
-            "gc_events": ep.stats["gc_events"],
-            "staging_occupancy": len(ctl.staging) / ctl.staging_capacity,
-            "ds": dict(ctl.ds_stats),
+            "promotions": self.counters["promotions"],
+            "demotions": self.counters["demotions"],
+            "migrate_ns": self.counters["migrate_ns"],
+            "sr_hit_rate": self.sr_hit_rate(),
+            "ep_prefetches": sum(p["ep_prefetches"] for p in ports),
+            "gc_events": sum(p["gc_events"] for p in ports),
+            "staging_occupancy": self.store_occupancy(),
+            "ds": dict(self.stream.ctl.ds_stats) if not self.cfg.tagged
+            else [dict(p.ctl.ds_stats) for p in self.topo.ports],
+            "ports": ports,
             "trace_ops": len(self.ops),
             "trace_truncated": self.trace_truncated,
         }

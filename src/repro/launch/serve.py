@@ -6,6 +6,9 @@
 ``--cxl-media`` attaches the CXL-timed memory tier: page flushes and
 prefix restores are charged against the simulated endpoint and the
 restore stall / SR hit rate are reported alongside throughput.
+``--cxl-topology dram,ssd-fast`` attaches a multi-root-port tier
+instead (``--cxl-placement`` picks striped / hashed / hotness) and adds
+a per-port stats line.
 """
 from __future__ import annotations
 
@@ -25,12 +28,26 @@ from repro.serving.engine import Request, ServingEngine
 def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           n_slots: int = 4, max_seq: int = 128, max_new: int = 12,
           prompt_len: int = 6, seed: int = 0,
-          cxl_media: str = "", cxl_sr: bool = True):
+          cxl_media: str = "", cxl_sr: bool = True,
+          cxl_topology: str = "", cxl_placement: str = "striped"):
+    """Serve ``n_requests`` random prompts through the tiered engine.
+
+    ``cxl_media`` attaches a single-port CXL-timed tier; ``cxl_topology``
+    (comma-separated media bins, e.g. ``"dram,ssd-fast"``) attaches a
+    multi-root-port tier instead, with ``cxl_placement`` choosing how
+    entries spread across the ports (striped / hashed / hotness).
+    Returns ``(engine, finished_requests)``.
+    """
     cfg = registry.smoke(arch) if smoke else registry.get(arch)
     mesh = make_host_mesh() if smoke else make_production_mesh()
     rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
-    tier = CxlTier(TierConfig(media=cxl_media, sr_enabled=cxl_sr)) \
-        if cxl_media else None
+    tier = None
+    if cxl_topology:
+        tier = CxlTier(TierConfig(
+            topology=tuple(m.strip() for m in cxl_topology.split(",")),
+            placement=cxl_placement, sr_enabled=cxl_sr))
+    elif cxl_media:
+        tier = CxlTier(TierConfig(media=cxl_media, sr_enabled=cxl_sr))
     with jax.set_mesh(mesh):
         params = M.init_model(jax.random.PRNGKey(seed), cfg)
         engine = ServingEngine(params, cfg, rc, n_slots=n_slots,
@@ -66,6 +83,17 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
               f"SR hit rate {snap['sr_hit_rate']:.2f}, "
               f"{engine.stats['flushes_deferred']} flush windows deferred "
               f"by the EP, {snap['gc_events']} internal tasks")
+        if tier.cfg.tagged:
+            print(f"[serve] topology ({snap['placement']} placement, "
+                  f"{snap['promotions']} promotions / "
+                  f"{snap['demotions']} demotions):")
+            for p in snap["ports"]:
+                print(f"[serve]   port {p['port']} ({p['media']}): "
+                      f"{p['ep_reads']} EP reads, {p['ep_writes']} writes, "
+                      f"SR hit rate {p['sr_hit_rate']:.2f}, "
+                      f"{p['live_bytes'] / 1024:.0f} KiB live, "
+                      f"devload {p['devload']}, "
+                      f"staging {p['staging_occupancy']:.2f}")
     return engine, finished
 
 
@@ -81,10 +109,18 @@ def main() -> None:
                          "ssd-slow (or any sim media spec, e.g. znand@2)")
     ap.add_argument("--cxl-sr-off", action="store_true",
                     help="disable the speculative-read engine on the tier")
+    ap.add_argument("--cxl-topology", default="",
+                    help="multi-root-port tier: comma-separated per-port "
+                         "media bins (e.g. 'dram,ssd-fast,ssd-slow'); "
+                         "overrides --cxl-media")
+    ap.add_argument("--cxl-placement", default="striped",
+                    choices=["striped", "hashed", "hotness"],
+                    help="entry placement across the topology's ports")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, n_requests=args.requests,
           n_slots=args.slots, max_new=args.max_new,
-          cxl_media=args.cxl_media, cxl_sr=not args.cxl_sr_off)
+          cxl_media=args.cxl_media, cxl_sr=not args.cxl_sr_off,
+          cxl_topology=args.cxl_topology, cxl_placement=args.cxl_placement)
 
 
 if __name__ == "__main__":

@@ -66,6 +66,13 @@ from repro.parallel import sharding as shlib
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: prompt tokens in, generated tokens out.
+
+    ``restore_stall_ns`` is the simulated CXL demand-fetch stall (ns)
+    charged when the request was served via a cold-tier prefix restore
+    (0.0 otherwise or without an attached tier).
+    """
+
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
@@ -144,6 +151,7 @@ class HostPageStore:
         return rid in self.pages
 
     def get(self, rid: int):
+        """Fetch ``rid``'s entry (refreshing LRU recency), else None."""
         entry = self.pages.get(rid)
         if entry is not None:
             self.pages.move_to_end(rid)
@@ -241,7 +249,12 @@ class ServingEngine:
                       "restore_stall_ns": 0.0, "tier_write_ns": 0.0,
                       "tier_sr_hit_rate": 0.0,
                       "tier_store_occupancy": 0.0, "flush_backlog": 0,
-                      "flushes_deferred": 0}
+                      "flushes_deferred": 0,
+                      # per-root-port telemetry (multi-port topologies):
+                      # occupancy, queue depth, DevLoad, SR hit rate per
+                      # port, materialized when run() drains (live view:
+                      # tier.port_stats())
+                      "tier_ports": []}
 
     # ----------------------------------------------------------- step fns
     def _step(self, params, cache, tokens):
@@ -306,6 +319,7 @@ class ServingEngine:
 
     # ------------------------------------------------------------ admit
     def submit(self, req: Request) -> None:
+        """Enqueue a request (admission happens on a later tick)."""
         # Speculative read at enqueue time: if this request's pages sit in
         # the cold tier, pre-share the addresses with the EP (MemSpecRd)
         # now — admission happens ticks later, so the fill runs ahead of
@@ -660,26 +674,37 @@ class ServingEngine:
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions
 
-    def _tier_tick(self) -> None:
-        """Advance simulated time one engine tick and surface tier state."""
+    def _tier_tick(self, refresh_ports: bool = False) -> None:
+        """Advance simulated time one engine tick and surface tier state.
+
+        With a multi-port tier attached this is also the drain barrier:
+        per-port clocks (which overlap freely within a tick) realign.
+        The per-port telemetry list (occupancy, queue depth, DevLoad, SR
+        hit rate) is only materialized into ``stats["tier_ports"]`` when
+        ``refresh_ports`` is set — ``run()`` does so on drain; building N
+        dicts per decode tick would be pure hot-loop overhead (read
+        ``tier.port_stats()`` directly for a live view).
+        """
         self.stats["flush_backlog"] = len(self.flusher.pending)
         if self.tier is None:
             return
         self.tier.advance(self.tier_step_ns)
-        ctl = self.tier.stream.ctl
         self.stats["tier_sr_hit_rate"] = self.tier.sr_hit_rate()
-        self.stats["tier_store_occupancy"] = \
-            len(ctl.staging) / ctl.staging_capacity
+        self.stats["tier_store_occupancy"] = self.tier.store_occupancy()
+        if refresh_ports:
+            self.stats["tier_ports"] = self.tier.port_stats()
         self.stats["flushes_deferred"] = self.flusher.deferred
 
     def run(self, max_ticks: int = 1000) -> List[Request]:
+        """Tick until the queue and slots drain (or ``max_ticks``);
+        returns the finished requests in retirement order."""
         ticks = 0
         while (self.queue or any(s is not None for s in self.slots)) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1
         self.flusher.maybe_flush()
-        self._tier_tick()
+        self._tier_tick(refresh_ports=True)
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions
         return self.finished

@@ -1,4 +1,13 @@
-from repro.sim.engine import RunResult, run, slowdown_vs_ideal
+"""Cycle-approximate CXL-GPU simulator.
+
+Scalar oracle (``engine``), vectorized sweep engine (``vector``),
+root-port controller (``controller``), media/endpoint models (``media``),
+Table 1b trace generators (``workloads``) and scenario matrices
+(``sweep``). ``engine`` also hosts the page-granular timing surface the
+serving tier charges against (``PageStream`` / ``Topology``).
+"""
+from repro.sim.engine import (PageStream, RunResult, Topology,
+                              replay_page_trace, run, slowdown_vs_ideal)
 from repro.sim.media import (DRAM, MEDIA, NAND, OPTANE, ZNAND, Endpoint,
                              resolve_media)
 from repro.sim.controller import RootPortController
@@ -6,5 +15,6 @@ from repro.sim.vector import run as run_vectorized
 from repro.sim import sweep, workloads
 
 __all__ = ["RunResult", "run", "run_vectorized", "slowdown_vs_ideal",
+           "PageStream", "Topology", "replay_page_trace",
            "DRAM", "MEDIA", "NAND", "OPTANE", "ZNAND", "Endpoint",
            "RootPortController", "resolve_media", "sweep", "workloads"]

@@ -38,6 +38,9 @@ TXN_SLOTS = 32             # outstanding CXL.mem transactions per root port
 
 @dataclasses.dataclass
 class SRStats:
+    """Speculative-read engine counters (windows issued / deduped /
+    halted by QoS, and total MemSpecRd bytes requested)."""
+
     issued: int = 0
     deduped: int = 0
     halted: int = 0

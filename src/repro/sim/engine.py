@@ -49,6 +49,8 @@ WARMUP_FRAC = 0.33            # caches/pages warm before timing starts
 
 
 class LRU:
+    """Bounded LRU set of keys (LLC lines / UVM pages), capacity in keys."""
+
     __slots__ = ("cap", "d")
 
     def __init__(self, cap: int):
@@ -56,12 +58,14 @@ class LRU:
         self.d: OrderedDict = OrderedDict()
 
     def hit(self, key) -> bool:
+        """Probe + refresh recency; True iff ``key`` is resident."""
         if key in self.d:
             self.d.move_to_end(key)
             return True
         return False
 
     def fill(self, key) -> None:
+        """Insert ``key``, evicting the least recently used past ``cap``."""
         if key in self.d:
             self.d.move_to_end(key)
             return
@@ -72,6 +76,13 @@ class LRU:
 
 @dataclasses.dataclass
 class RunResult:
+    """One engine run's outcome: timed window + controller telemetry.
+
+    ``exec_ns`` is the post-warmup simulated execution time in ns over
+    ``n_ops`` trace entries; ``sr``/``ds`` hold the controller's SR and
+    deterministic-store counters when a CXL config ran.
+    """
+
     config: str
     workload: str
     media: str
@@ -84,6 +95,7 @@ class RunResult:
 
     @property
     def latency_per_op(self) -> float:
+        """Mean simulated ns per (post-warmup) trace op."""
         return self.exec_ns / self.n_ops
 
 
@@ -226,11 +238,13 @@ def run(config: str, workload: str, media_name: str = "dram", *,
 
 def slowdown_vs_ideal(config: str, workload: str, media: str = "dram",
                       **kw) -> float:
+    """Execution-time ratio of ``config`` vs the gpu-dram ideal (Fig. 9)."""
     base = run("gpu-dram", workload, media, **kw).exec_ns
     return run(config, workload, media, **kw).exec_ns / base
 
 
 def category_mean(results: Dict[str, float], category: str) -> float:
+    """Mean of per-workload ``results`` over one Table 1b category."""
     names = [n for n, s in wl.TABLE_1B.items() if s.category == category]
     vals = [results[n] for n in names if n in results]
     return float(np.mean(vals)) if vals else float("nan")
@@ -338,16 +352,97 @@ class PageStream:
         raise ValueError(f"unknown page-op kind {kind}")
 
 
+class Topology:
+    """N root ports, each fronting its own endpoint, with per-port clocks.
+
+    The paper's headline system design: "multiple CXL root ports for
+    integrating diverse storage media (DRAMs and/or SSDs)". Each port is
+    one blocking :class:`PageStream` (root port + EP + QoS state) with its
+    *own* simulated clock (``ports[p].now``, ns), so page ops issued on
+    different ports overlap in simulated time — the async **issue** half.
+    :meth:`sync` is the **drain** half: a barrier that realigns every port
+    clock to the topology-wide maximum, called at engine-tick boundaries
+    (:meth:`advance`) and wherever the caller needs completions settled.
+
+    With one port this degenerates exactly to the single blocking
+    ``PageStream`` (``sync`` is a no-op), which is what keeps the 1-port
+    topology bit-identical to the pre-topology serving tier.
+
+    Args:
+        medias: per-port media specs (names, bins already resolved, or
+            scaled variants like ``"znand@2"``); one EP per entry.
+        sr/ds/req_bytes/dram_cache_bytes: per-port ``PageStream`` knobs
+            (shared by every port).
+    """
+
+    def __init__(self, medias, *, sr: bool = True, ds: bool = True,
+                 req_bytes: int = 256, dram_cache_bytes: int = 8 << 20):
+        if not medias:
+            raise ValueError("a Topology needs at least one port")
+        self.ports = [PageStream(m, sr=sr, ds=ds, req_bytes=req_bytes,
+                                 dram_cache_bytes=dram_cache_bytes)
+                      for m in medias]
+
+    @property
+    def n_ports(self) -> int:
+        """Number of root ports (== EPs) in the topology."""
+        return len(self.ports)
+
+    @property
+    def now(self) -> float:
+        """Topology-wide simulated time (ns): the furthest port clock."""
+        return max(p.now for p in self.ports)
+
+    def sync(self) -> float:
+        """Drain barrier: realign every port clock to the max; returns it.
+
+        This is where completions from overlapped per-port ops are
+        settled — after ``sync`` all ports agree on "now" (ns).
+        """
+        t = max(p.now for p in self.ports)
+        for p in self.ports:
+            p.now = t
+        return t
+
+    def advance(self, dt_ns: float) -> float:
+        """Tick boundary: drain all ports, then pass ``dt_ns`` of idle
+        time to each (QoS DevLoad samples + background flush windows, as
+        ``PageStream.advance``). Returns 0.0 (free on the demand path)."""
+        self.sync()
+        for p in self.ports:
+            p.advance(dt_ns)
+        return 0.0
+
+    def op(self, port: int, kind: int, addr: int, nbytes: int) -> float:
+        """Dispatch one port-tagged page op; returns its latency (ns).
+
+        ``port < 0`` (used for ``PAGE_ADVANCE`` records) broadcasts to the
+        whole topology through :meth:`advance`.
+        """
+        if kind == PAGE_ADVANCE:
+            return self.advance(float(nbytes))
+        return self.ports[port].op(kind, addr, nbytes)
+
+
 def replay_page_trace(ops, *, media: str = "znand", sr: bool = True,
                       ds: bool = True, req_bytes: int = 256,
-                      dram_cache_bytes: int = 8 << 20) -> np.ndarray:
+                      dram_cache_bytes: int = 8 << 20,
+                      topology=None) -> np.ndarray:
     """Scalar-oracle replay of a recorded page trace.
 
-    ``ops`` is an iterable of ``(kind, addr, nbytes)`` tuples (the
-    ``CxlTier.ops`` recording). Returns the per-op latencies of a fresh
-    :class:`PageStream` walking the same trace — the cross-validation
-    oracle for the tier's incremental accounting.
+    ``ops`` is the ``CxlTier.ops`` recording: ``(kind, addr, nbytes)``
+    tuples for a single-port tier, or port-tagged
+    ``(port, kind, addr, nbytes)`` tuples when ``topology`` (a sequence
+    of per-port media specs) is given. Returns the per-op latencies (ns)
+    of a fresh :class:`PageStream` / :class:`Topology` walking the same
+    trace — the cross-validation oracle for the tier's incremental
+    accounting.
     """
+    if topology is not None:
+        topo = Topology(topology, sr=sr, ds=ds, req_bytes=req_bytes,
+                        dram_cache_bytes=dram_cache_bytes)
+        return np.asarray([topo.op(p, k, a, n) for p, k, a, n in ops],
+                          np.float64)
     stream = PageStream(media, sr=sr, ds=ds, req_bytes=req_bytes,
                         dram_cache_bytes=dram_cache_bytes)
     return np.asarray([stream.op(k, a, n) for k, a, n in ops], np.float64)

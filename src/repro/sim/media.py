@@ -41,6 +41,11 @@ US = 1000.0
 
 @dataclasses.dataclass(frozen=True)
 class MediaModel:
+    """One backend media part (Table 1a): service latencies in ns, per-
+    channel bandwidth in GB/s (== bytes/ns), and the internal-task (GC /
+    wear-leveling) cadence. ``gc_every_bytes == 0`` marks DRAM-class
+    media with no internal tasks."""
+
     name: str
     read_ns: float            # base access latency, one internal granule
     write_ns: float
@@ -50,6 +55,7 @@ class MediaModel:
     gc_ns: float = 0.0        # stall per internal task
 
     def xfer_ns(self, nbytes: int) -> float:
+        """Transfer time (ns) of ``nbytes`` on one channel."""
         return nbytes / self.bw_gbps  # GB/s == bytes/ns
 
     def scaled(self, latency: float = 1.0, bw: float = 1.0) -> "MediaModel":
@@ -125,7 +131,12 @@ class Endpoint:
     def __init__(self, media: MediaModel, dram_cache_bytes: int = 64 << 20,
                  ingress_depth: int = 64):
         self.media = media
-        self.is_dram = media.gc_every_bytes == 0 and media.read_ns < 100
+        # DRAM-class = no internal tasks: scaled variants ("dram@2") stay
+        # DRAM-class so the latency multiplier is charged on every access
+        # instead of being silently dropped on internal-cache hits (the
+        # cache path bills hits at the *unscaled* internal-DRAM speed).
+        # repro.sim.vector mirrors this classification — keep in lockstep.
+        self.is_dram = media.gc_every_bytes == 0
         self.cache_capacity = max(dram_cache_bytes // self.BLOCK, 1)
         self.cache: "OrderedDict[int, float]" = OrderedDict()  # ready time
         self.ingress_depth = ingress_depth
@@ -319,5 +330,6 @@ class Endpoint:
         return DevLoad.LIGHT
 
     def hit_rate(self) -> float:
+        """Fraction of demand reads served ready from internal DRAM."""
         r = self.stats["reads"]
         return self.stats["hits"] / r if r else 0.0

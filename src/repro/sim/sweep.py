@@ -44,6 +44,8 @@ class Scenario:
 
     @property
     def key(self) -> str:
+        """Stable scenario id ("config/workload/media[/...]") for results
+        tables and artifact keys."""
         tail = f"/n{self.n_ops}"
         if (self.mlp, self.store_q) != (MLP, STORE_Q):
             tail += f"/mlp{self.mlp}sq{self.store_q}"
@@ -107,6 +109,7 @@ _ENGINES = {"vector": vector_engine.run, "scalar": scalar_engine.run}
 
 
 def run_scenario(s: Scenario, engine: str = "vector") -> RunResult:
+    """Run one scenario on the named engine ("vector" or "scalar")."""
     return _ENGINES[engine](s.config, s.workload, s.media, n_ops=s.n_ops,
                             mlp=s.mlp, store_q=s.store_q, seed=s.seed)
 

@@ -135,6 +135,8 @@ _BUNDLES_MAX = 64
 
 def bundle_for(workload: str, n_ops: int, working_set: int, seed: int,
                trace: Optional[np.ndarray] = None) -> TraceBundle:
+    """Cached TraceBundle for a (workload, n_ops, working_set, seed)
+    key; an explicit ``trace`` bypasses the cache (treat as read-only)."""
     if trace is not None:
         return TraceBundle(trace)
     key = (workload, n_ops, working_set, seed)
@@ -1047,7 +1049,8 @@ def run(config: str, workload: str, media_name="dram", *,
                            record_samples, media_name)
     elif config in _SR_MODE:
         # Endpoint.is_dram media: SR/QoS never engage, closed form applies
-        dram_class = media.gc_every_bytes == 0 and media.read_ns < 100
+        # (lockstep with Endpoint.is_dram: scaled DRAM stays DRAM-class)
+        dram_class = media.gc_every_bytes == 0
         if dram_class and media.read_ns == media.write_ns \
                 and not _saturated(bundle, config, media):
             out = _run_cxl_dram(bundle, config, media, mlp, store_q,
@@ -1078,9 +1081,9 @@ def run(config: str, workload: str, media_name="dram", *,
 
 def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
                            req_bytes: int = 256) -> np.ndarray:
-    """Closed-form per-op latencies for a blocking single-stream page trace
-    on a DRAM-class EP — the vectorized cross-check for the serving tier's
-    ``dram`` media bin.
+    """Closed-form per-op latencies for a blocking page trace on
+    DRAM-class EPs — the vectorized cross-check for the serving tier's
+    ``dram`` media bin and for the DRAM-EP lanes of a multi-port topology.
 
     Valid because a *blocking* stream on a DRAM EP never queues: every
     demand request finds its transaction slot and channel free (the next
@@ -1093,21 +1096,54 @@ def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
                 CXL_RTT + write_ns + xfer(64B)   (ds disabled)
 
     and a page op of ``ceil(nbytes / req_bytes)`` requests is that many
-    multiples. Prefetch and advance ops are free on the demand path (SR
-    never engages on a DRAM EP). Raises ``ValueError`` for media with
-    internal tasks — those need the event loop, not a closed form.
+    multiples. The same per-op algebra holds per *port* of a multi-port
+    topology: DRAM lanes never queue, so each lane's ops cost the same
+    whether or not other lanes run concurrently — pass port-tagged
+    ``(port, kind, addr, nbytes)`` ops plus a sequence of per-port media
+    specs as ``media_name``. Prefetch and advance ops are free on the
+    demand path (SR never engages on a DRAM EP). Raises ``ValueError``
+    for media with internal tasks (any lane) — those need the event loop,
+    not a closed form.
+
+    Args:
+        ops: ``(kind, addr, nbytes)`` tuples, or port-tagged 4-tuples.
+        media_name: one media spec, or a sequence of per-port specs for
+            port-tagged ops.
+        ds: deterministic store enabled (writes bill at GPU-memory speed).
+        req_bytes: bytes per CXL.mem request within a page op.
+
+    Returns:
+        Per-op latencies (ns), aligned with ``ops``.
     """
-    media = resolve_media(media_name)
-    if media.gc_every_bytes != 0 or media.read_ns >= 100:
-        raise ValueError(f"{media.name}: closed form needs a DRAM-class EP")
-    kinds = np.asarray([k for k, _, _ in ops], np.int64)
-    nbytes = np.asarray([n for _, _, n in ops], np.int64)
+    if isinstance(media_name, (list, tuple)):
+        medias = [resolve_media(m) for m in media_name]
+        ops = list(ops)
+        ports = np.asarray([p for p, _, _, _ in ops], np.int64)
+        rest = [(k, a, n) for _, k, a, n in ops]
+    else:
+        medias = [resolve_media(media_name)]
+        rest = list(ops)
+        ports = np.zeros(len(rest), np.int64)
+    for media in medias:
+        # lockstep with Endpoint.is_dram: DRAM-class = no internal tasks
+        # (scaled variants like "dram@2" stay valid — the blocking stream
+        # never queues regardless of the latency multiplier)
+        if media.gc_every_bytes != 0:
+            raise ValueError(f"{media.name}: closed form needs a "
+                             "DRAM-class EP")
+    kinds = np.asarray([k for k, _, _ in rest], np.int64)
+    nbytes = np.asarray([n for _, _, n in rest], np.int64)
     n_reqs = -(-nbytes // req_bytes)
     line = 64                      # CXL.mem request granularity (MemRd)
-    read_req = CXL_RTT_NS + media.read_ns + media.xfer_ns(line)
-    write_req = GPU_MEM_NS if ds \
-        else CXL_RTT_NS + media.write_ns + media.xfer_ns(line)
+    read_req = np.asarray(
+        [CXL_RTT_NS + m.read_ns + m.xfer_ns(line) for m in medias])
+    write_req = np.asarray(
+        [GPU_MEM_NS if ds else CXL_RTT_NS + m.write_ns + m.xfer_ns(line)
+         for m in medias])
+    lane = np.clip(ports, 0, len(medias) - 1)   # advance records use -1
     lat = np.zeros(len(kinds), np.float64)
-    lat[kinds == se.PAGE_READ] = (n_reqs * read_req)[kinds == se.PAGE_READ]
-    lat[kinds == se.PAGE_WRITE] = (n_reqs * write_req)[kinds == se.PAGE_WRITE]
+    lat[kinds == se.PAGE_READ] = \
+        (n_reqs * read_req[lane])[kinds == se.PAGE_READ]
+    lat[kinds == se.PAGE_WRITE] = \
+        (n_reqs * write_req[lane])[kinds == se.PAGE_WRITE]
     return lat

@@ -28,6 +28,9 @@ MEM_REQ = 64  # CXL.mem granule
 
 @dataclasses.dataclass(frozen=True)
 class WorkloadSpec:
+    """One Table 1b workload: instruction-mix ratios (fractions of the
+    trace) and its dominant access pattern class."""
+
     name: str
     category: str        # compute | load | store | real
     compute_ratio: float
@@ -122,6 +125,8 @@ def generate(name: str, n_ops: int = 60_000,
 
 
 def pattern_class(name: str) -> str:
+    """Access-pattern class of a workload ("Seq"/"Around"/... or
+    "mixed" for composites)."""
     p = TABLE_1B[name].pattern
     if p == "composite":
         return "mixed"
@@ -140,6 +145,8 @@ _TRACE_CACHE_MAX = 64
 def generate_cached(name: str, n_ops: int = 60_000,
                     working_set: int = 640 << 20,
                     seed: int = 0) -> np.ndarray:
+    """Memoized :func:`generate`: one trace per key, shared across the
+    sweep's engines/configs. Returned arrays are read-only by contract."""
     key = (name, n_ops, working_set, seed)
     tr = _TRACE_CACHE.get(key)
     if tr is None:

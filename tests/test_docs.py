@@ -1,0 +1,30 @@
+"""Tier-1 enforcement of the documentation surface.
+
+Runs the same three checks as the CI ``docs`` job
+(``tools/check_docs.py``): no dead intra-repo links/anchors, full
+docstring coverage of the public API in ``repro.sim`` / ``repro.core``
+/ ``repro.serving`` (pydocstyle-lite), and no drift between the
+``BENCH_serve.json`` schema documented in docs/ARCHITECTURE.md and the
+keys ``benchmarks/serve_bench.py`` actually emits.
+"""
+import importlib.util
+import os
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_docs",
+    os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                 "tools", "check_docs.py"))
+check_docs = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_docs)
+
+
+def test_no_dead_links_or_anchors():
+    assert check_docs.check_links() == []
+
+
+def test_public_api_docstring_coverage():
+    assert check_docs.check_docstrings() == []
+
+
+def test_bench_serve_schema_matches_docs():
+    assert check_docs.check_bench_schema() == []

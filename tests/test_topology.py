@@ -1,0 +1,294 @@
+"""Edge-case + differential tests for the multi-root-port tier topology.
+
+Pins the topology layer's contracts: a 1-port topology is bit-identical
+to the pre-topology single-port tier (backwards compat), hashed placement
+is stable across runs, hotness promotion/demotion never strands an entry,
+per-restore fan-out across ports strictly reduces stall vs one port on
+identical traffic, the ``name@mult`` media multiplier is applied
+consistently (regression for the silently-ignored-on-hits bug), and the
+port-tagged op trace replays within 1% of the scalar oracle — including
+with the serving engine in the loop.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.core.tier import CxlTier, TierConfig, resolve_bin
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+from repro.sim import vector
+from repro.sim.engine import PageStream, Topology, replay_page_trace
+from repro.sim.media import Endpoint, resolve_media
+
+ENTRY = 32 << 10          # synthetic page-entry size (bytes)
+
+
+def _replay(tier: CxlTier) -> np.ndarray:
+    return replay_page_trace(
+        tier.ops, media=tier.cfg.media_name,
+        topology=tier.cfg.port_medias if tier.cfg.tagged else None,
+        sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
+        req_bytes=tier.cfg.req_bytes,
+        dram_cache_bytes=tier.cfg.dram_cache_bytes)
+
+
+def _churn(tier: CxlTier, n: int = 8) -> float:
+    """Write + SR + read every entry; returns the total restore stall."""
+    for i in range(n):
+        tier.write_entry(i, ENTRY)
+        tier.advance(50_000.0)
+    stall = 0.0
+    for i in range(n):
+        tier.speculative_read(i, ENTRY)
+        stall += tier.read_entry(i, ENTRY)
+    return stall
+
+
+# ------------------------------------------------- backwards compatibility
+
+def test_one_port_topology_bit_identical_to_legacy_tier():
+    """The 1-port topology must reproduce the pre-topology single-port
+    tier exactly: same charged latencies, same ops modulo the port tag."""
+    legacy = CxlTier(TierConfig(media="ssd-fast"))
+    one = CxlTier(TierConfig(topology=("ssd-fast",)))
+    _churn(legacy)
+    _churn(one)
+    assert legacy.op_ns == one.op_ns            # bit-identical, not approx
+    assert legacy.ops == [(k, a, n) for _, k, a, n in one.ops]
+    assert [p for p, _, _, _ in one.ops if p >= 0] == \
+        [0] * sum(p >= 0 for p, _, _, _ in one.ops)
+
+
+def test_legacy_trace_stays_untagged():
+    tier = CxlTier(TierConfig(media="ssd-fast"))
+    tier.write_entry("a", ENTRY)
+    assert all(len(op) == 3 for op in tier.ops)
+
+
+# --------------------------------------------------------- overlap gates
+
+def test_multi_port_overlap_strictly_reduces_stall():
+    """Striping an entry's pages across ports fans the demand fetch out:
+    the restore stalls for the slowest lane only, strictly less than the
+    serialized single-port stream on identical traffic."""
+    s1 = _churn(CxlTier(TierConfig(topology=("ssd-fast",))))
+    s2 = _churn(CxlTier(TierConfig(topology=("dram", "ssd-fast"))))
+    assert s2 < s1
+
+
+def test_flushes_to_distinct_ports_overlap():
+    """Writer-held time for a striped flush is the max lane, not the sum:
+    with DS off (writes block), two equal lanes take about half the
+    single-port time."""
+    one = CxlTier(TierConfig(topology=("dram",), ds_enabled=False))
+    two = CxlTier(TierConfig(topology=("dram", "dram"), ds_enabled=False))
+    h1 = one.write_entry("a", ENTRY)
+    h2 = two.write_entry("a", ENTRY)
+    assert h2 < 0.75 * h1
+
+
+def test_advance_is_the_drain_barrier():
+    topo = Topology(["dram", "znand"])
+    topo.ports[1].write(0, ENTRY)
+    assert topo.ports[0].now != topo.ports[1].now
+    topo.advance(1000.0)
+    assert topo.ports[0].now == topo.ports[1].now
+
+
+# ------------------------------------------------------ hashed placement
+
+def test_hashed_placement_stable_across_runs():
+    """Same keys -> same ports -> identical op traces on fresh tiers (the
+    hash is blake2b of repr, not the per-process-salted builtin)."""
+    cfg = TierConfig(topology=("dram", "ssd-fast", "ssd-slow"),
+                     placement="hashed")
+    t1, t2 = CxlTier(cfg), CxlTier(cfg)
+    keys = [0, 1, 17, "prompt-a", ("warm", 3)]
+    for t in (t1, t2):
+        for k in keys:
+            t.write_entry(k, ENTRY)
+            t.read_entry(k, ENTRY)
+    assert t1.ops == t2.ops
+    assert t1.op_ns == t2.op_ns
+    ports_used = {p for p, _, _, _ in t1.ops}
+    assert len(ports_used) > 1          # keys actually spread across ports
+
+
+# ----------------------------------------------------- hotness placement
+
+def test_hotness_promotes_hot_and_demotes_cold():
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast", "ssd-slow"),
+                              placement="hotness",
+                              hot_budget_bytes=2 * ENTRY))
+    for i in range(4):
+        tier.write_entry(i, ENTRY)
+    assert tier.counters["promotions"] == 0
+    for _ in range(tier.cfg.hot_promote_after):
+        tier.read_entry(0, ENTRY)       # heat 0 past the threshold
+    assert tier.counters["promotions"] == 1
+    fast = tier._fast_port
+    assert all(p == fast for p, _, _ in tier._segments[0])
+    for _ in range(tier.cfg.hot_promote_after):
+        for i in (1, 2, 3):
+            tier.read_entry(i, ENTRY)   # budget 2 entries: evictions follow
+    assert tier.counters["demotions"] >= 1
+
+
+def test_hotness_never_strands_an_entry():
+    """Arbitrary promote/demote interleavings must leave every rid
+    restorable — segments always map to live, readable ranges — and the
+    recorded trace must still replay within 1%."""
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast", "ssd-slow"),
+                              placement="hotness",
+                              hot_budget_bytes=2 * ENTRY))
+    rng = np.random.default_rng(7)
+    keys = list(range(10))
+    sizes = {k: int(rng.integers(1 << 10, 3 * ENTRY)) for k in keys}
+    for k in keys:
+        tier.write_entry(k, sizes[k])
+    for _ in range(120):                # skewed churn: heavy promote/demote
+        k = keys[int(rng.zipf(1.7)) % len(keys)]
+        if rng.random() < 0.25:
+            tier.write_entry(k, sizes[k])
+        else:
+            assert tier.read_entry(k, sizes[k]) > 0.0
+    assert tier.counters["promotions"] >= 1
+    assert tier.counters["demotions"] >= 1
+    for k in keys:                      # nothing stranded
+        segs = tier._segments[k]
+        assert sum(c for _, _, c in segs) >= min(sizes[k], 1)
+        assert tier.read_entry(k, sizes[k]) > 0.0
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
+
+
+def test_hotness_grown_relocation_keeps_fast_residency_honest():
+    """Regression: a promoted entry that grows gets relocated by the
+    placement layer onto a capacity port; it must leave the fast-port
+    residency set with it, or a later demotion charges its pull-back
+    reads on the fast port at addresses belonging to another port's bump
+    space. Invariant: every charged op lands inside its own port's
+    allocated range."""
+    from repro.sim.engine import PAGE_ADVANCE, PAGE_READ
+
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast", "ssd-slow"),
+                              placement="hotness",
+                              hot_budget_bytes=2 * ENTRY))
+    for k in ("a", "b", "c"):
+        tier.write_entry(k, ENTRY)
+    for _ in range(tier.cfg.hot_promote_after):
+        tier.read_entry("a", ENTRY)
+        tier.read_entry("b", ENTRY)
+    assert "a" in tier._fast_resident and "b" in tier._fast_resident
+    tier.write_entry("a", 3 * ENTRY)     # grown -> relocates off fast port
+    assert "a" not in tier._fast_resident
+    for _ in range(tier.cfg.hot_promote_after):
+        tier.read_entry("c", ENTRY)      # promote c
+        tier.read_entry("a", 3 * ENTRY)  # re-promote grown a: forces demotion
+    assert tier.counters["demotions"] >= 1
+    for port, kind, addr, n in tier.ops:
+        if kind != PAGE_ADVANCE:
+            assert addr + n <= tier._base[port], \
+                f"op on port {port} outside its bump space"
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
+
+
+def test_hotness_on_homogeneous_topology_is_inert():
+    tier = CxlTier(TierConfig(topology=("ssd-fast", "ssd-fast"),
+                              placement="hotness"))
+    for i in range(4):
+        tier.write_entry(i, ENTRY)
+        for _ in range(4):
+            tier.read_entry(i, ENTRY)
+    assert tier.counters["promotions"] == 0
+    assert tier.counters["demotions"] == 0
+
+
+# ------------------------------------------- media multiplier regression
+
+def test_bin_multiplier_survives_bin_mapping():
+    """Regression: "ssd-fast@2" used to KeyError in resolve_media because
+    the bin name never mapped; the multiplier must ride along."""
+    assert resolve_bin("ssd-fast@2") == "znand@2"
+    assert TierConfig(media="ssd-fast@2").media_name == "znand@2"
+    assert TierConfig(topology=("dram@2", "ssd-slow@1.5")).port_medias == \
+        ("dram@2", "nand@1.5")
+    tier = CxlTier(TierConfig(media="ssd-fast@2"))
+    assert tier.stream.ep.media.read_ns == \
+        2 * resolve_media("znand").read_ns
+
+
+def test_scaled_dram_multiplier_charged_consistently():
+    """Regression: a scaled DRAM bin ("dram@2") fell off the DRAM-class
+    path and billed internal-cache hits at the *unscaled* DRAM latency —
+    the multiplier was silently ignored. It must now charge the scaled
+    latency on every access, agreeing with the closed form."""
+    assert Endpoint(resolve_media("dram@2")).is_dram
+    base = PageStream("dram")
+    scaled = PageStream("dram@2")
+    l1 = base.read(0, ENTRY)
+    l2 = scaled.read(0, ENTRY)
+    assert l2 > l1                       # 2x media latency actually billed
+    tier = CxlTier(TierConfig(media="dram@2"))
+    tier.write_entry(0, ENTRY)
+    tier.read_entry(0, ENTRY)
+    cf = vector.page_trace_closed_form(tier.ops, "dram@2", ds=True,
+                                       req_bytes=tier.cfg.req_bytes)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), cf, rtol=1e-9)
+
+
+def test_multi_port_closed_form_on_dram_lanes():
+    """The vectorized closed form extends per-port: DRAM lanes never
+    queue, so port-tagged ops cost the same algebra per lane."""
+    tier = CxlTier(TierConfig(topology=("dram", "dram@2")))
+    for i in range(4):
+        tier.write_entry(i, ENTRY)
+        tier.speculative_read(i, ENTRY)
+        tier.read_entry(i, ENTRY)
+        tier.advance(10_000.0)
+    cf = vector.page_trace_closed_form(tier.ops, tier.cfg.port_medias,
+                                       ds=True,
+                                       req_bytes=tier.cfg.req_bytes)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), cf, rtol=1e-9)
+    with pytest.raises(ValueError):
+        vector.page_trace_closed_form(tier.ops, ("dram", "znand"))
+
+
+# ------------------------------------------------- serving differential
+
+def test_serving_run_port_tagged_trace_matches_oracle(mesh_ctx):
+    """Engine in the loop on a 2-port heterogeneous topology: charged
+    per-op latencies must replay within 1%, restores must be charged, and
+    per-port telemetry must surface in engine.stats."""
+    cfg = registry.smoke("qwen3-1.7b")
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast"),
+                              placement="striped"))
+    eng = ServingEngine(params, cfg, rc, n_slots=2, max_seq=32,
+                        prefill_chunk=4, cxl_tier=tier)
+    prompts = [[i + 1, 2, 3, 4, 5] for i in range(4)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    eng.run(max_ticks=200)
+    for _ in range(300):
+        if not eng.flusher.pending:
+            break
+        tier.advance(eng.tier_step_ns)
+        eng.flusher.maybe_flush()
+    assert not eng.flusher.pending
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=100 + i, prompt=p, max_new_tokens=3))
+    eng.run(max_ticks=200)
+
+    assert eng.stats["prefix_hits"] == len(prompts)
+    assert eng.stats["restore_stall_ns"] > 0
+    ports = eng.stats["tier_ports"]
+    assert [p["media"] for p in ports] == ["DRAM", "Z-NAND"]
+    assert all(p["ep_writes"] > 0 for p in ports)   # striping hit both
+    assert all(len(op) == 4 for op in tier.ops)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)

@@ -1,0 +1,171 @@
+"""Documentation checks: links, docstring coverage, bench-schema drift.
+
+Three pure-stdlib-plus-numpy checks, run by the CI ``docs`` job and by
+``tests/test_docs.py`` inside the tier-1 suite:
+
+ 1. **Markdown link check** — every relative link/anchor in README.md and
+    docs/*.md must resolve to an existing file and (for ``#fragments``) a
+    real heading of the target, GitHub-slugified. External (``http``,
+    ``mailto``) and repo-escaping targets (badge/actions URLs) are
+    skipped.
+ 2. **Docstring coverage** (pydocstyle-lite) — every module, public
+    class, and public function/method in ``repro.sim``, ``repro.core``
+    and ``repro.serving`` must carry a docstring, enforced on the AST so
+    nothing needs importing.
+ 3. **BENCH_serve schema drift** — the schema table in
+    docs/ARCHITECTURE.md (between the ``BENCH_SERVE_SCHEMA`` markers)
+    must list exactly the keys ``benchmarks.serve_bench.SCHEMA_KEYS``
+    declares; serve_bench itself fails at emit time if its output drifts
+    from the same constant, closing the loop code <-> docs.
+
+Run: ``python tools/check_docs.py`` (exit 1 + report on any failure).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "docs/ARCHITECTURE.md", "docs/SIM_MAPPING.md"]
+DOCSTRING_PACKAGES = ["src/repro/sim", "src/repro/core",
+                      "src/repro/serving"]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    s = re.sub(r"[`*_]", "", heading.strip()).lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    return {_slugify(h) for h in _HEADING_RE.findall(text)}
+
+
+def check_links() -> list:
+    """Dead relative links / anchors in the documentation set."""
+    errs = []
+    for rel in DOC_FILES:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            errs.append(f"{rel}: file missing")
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, frag = target.partition("#")
+            if base:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), base))
+                if not dest.startswith(REPO):
+                    continue            # escapes the repo (badge links)
+                if not os.path.exists(dest):
+                    errs.append(f"{rel}: dead link -> {target}")
+                    continue
+            else:
+                dest = path             # same-file fragment
+            if frag and dest.endswith(".md") and \
+                    frag not in _anchors(dest):
+                errs.append(f"{rel}: dead anchor -> {target}")
+    return errs
+
+
+def _public_defs(tree: ast.Module):
+    """Yield (lineno, kind, name) for undocumented public defs."""
+    if ast.get_docstring(tree) is None:
+        yield 1, "module", "<module>"
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if not node.name.startswith("_") and \
+                    ast.get_docstring(node) is None:
+                yield node.lineno, "function", node.name
+        elif isinstance(node, ast.ClassDef) and \
+                not node.name.startswith("_"):
+            if ast.get_docstring(node) is None:
+                yield node.lineno, "class", node.name
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)) and \
+                        not sub.name.startswith("_") and \
+                        ast.get_docstring(sub) is None:
+                    yield sub.lineno, "method", f"{node.name}.{sub.name}"
+
+
+def check_docstrings() -> list:
+    """Public API without docstrings in the covered packages."""
+    errs = []
+    for pkg in DOCSTRING_PACKAGES:
+        root = os.path.join(REPO, pkg)
+        for dirpath, _, files in os.walk(root):
+            for fn in sorted(files):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, REPO)
+                with open(path, encoding="utf-8") as f:
+                    tree = ast.parse(f.read(), filename=rel)
+                for lineno, kind, name in _public_defs(tree):
+                    errs.append(f"{rel}:{lineno}: undocumented {kind} "
+                                f"{name}")
+    return errs
+
+
+def check_bench_schema() -> list:
+    """Drift between the documented BENCH_serve schema and SCHEMA_KEYS."""
+    bench_dir = os.path.join(REPO, "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        from serve_bench import SCHEMA_KEYS
+    finally:
+        # remove the exact entry we added: importing serve_bench runs its
+        # own sys.path.insert(0, src/), so pop(0) would strip that instead
+        # and leave benchmarks/ shadowing imports for the whole process
+        sys.path.remove(bench_dir)
+    declared = {k for keys in SCHEMA_KEYS.values() for k in keys}
+    path = os.path.join(REPO, "docs", "ARCHITECTURE.md")
+    if not os.path.exists(path):
+        return ["docs/ARCHITECTURE.md missing (bench schema table)"]
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    m = re.search(r"<!-- BENCH_SERVE_SCHEMA -->(.*?)"
+                  r"<!-- /BENCH_SERVE_SCHEMA -->", text, re.DOTALL)
+    if not m:
+        return ["docs/ARCHITECTURE.md: BENCH_SERVE_SCHEMA markers missing"]
+    documented = set(re.findall(r"`([A-Za-z0-9_]+)`", m.group(1)))
+    errs = []
+    if declared - documented:
+        errs.append("BENCH_serve keys emitted but not documented: "
+                    f"{sorted(declared - documented)}")
+    if documented - declared:
+        errs.append("BENCH_serve keys documented but not emitted: "
+                    f"{sorted(documented - declared)}")
+    return errs
+
+
+def main() -> int:
+    """Run all checks; print a report and return a shell exit code."""
+    failures = []
+    for name, check in [("links", check_links),
+                        ("docstrings", check_docstrings),
+                        ("bench-schema", check_bench_schema)]:
+        errs = check()
+        status = "ok" if not errs else f"{len(errs)} problem(s)"
+        print(f"[check_docs] {name}: {status}")
+        for e in errs:
+            print(f"  {e}")
+        failures.extend(errs)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
