@@ -11,14 +11,19 @@ Measures, for the same CPU config and request mix:
    with zero prefill dispatches (new path)
 
 ``--cxl-tier`` additionally sweeps the CXL-timed memory tier: media bins
-(dram / ssd-fast / ssd-slow x SR on/off) and the multi-root-port
+(dram / ssd-fast / ssd-slow x SR on/off), the multi-root-port
 **topology axis** (1-port baseline vs 2-/3-port heterogeneous topologies
-x placement policy). The same serving traffic is charged against the
-simulated endpoints; per-restore stall / SR hit rate / per-port stats
-land in a ``cxl_tier`` section with acceptance gates that SR-on beats
-SR-off per bin, that multi-port overlap strictly reduces aggregate
-restore stall vs the 1-port baseline, and that every (port-tagged) op
-trace replays within 1% of the scalar oracle.
+x placement policy), and the **scheduler axis** (blocking vs
+completion-based async restores; FIFO vs preempt+swap under slot
+pressure). The same serving traffic is charged against the simulated
+endpoints; per-restore stall / SR hit rate / per-port stats land in a
+``cxl_tier`` section with acceptance gates that SR-on beats SR-off per
+bin, that multi-port overlap strictly reduces aggregate restore stall vs
+the 1-port baseline, that async restore strictly reduces aggregate stall
+vs blocking on identical traffic, that preempt+swap completes strictly
+more requests per simulated second than FIFO under pressure, and that
+every (port-tagged, async) op trace replays within 1% of the scalar
+oracle.
 
 Emits BENCH_serve.json with both sides + speedups so the perf trajectory
 has a serving datapoint. Run:
@@ -55,13 +60,20 @@ SCHEMA_KEYS = {
                "runs", "store_bytes", "store_evictions"),
     "device_extra": ("resubmit_prefill_dispatches", "prefix_hits",
                      "prefix_hit_rate"),
-    "cxl_tier": ("config", "media_bins", "topology", "acceptance"),
+    "cxl_tier": ("config", "media_bins", "topology", "scheduler",
+                 "acceptance"),
     "tier_scenario": ("restores", "restore_stall_ns_total",
                       "restore_stall_ns_per_restore", "sr_hit_rate",
                       "sr_prefetch_pages", "flush_write_ns_total",
                       "store_queue_occupancy", "flushes_deferred",
                       "gc_events", "trace_ops"),
     "topology_extra": ("ports", "promotions", "demotions",
+                       "replay_within_1pct"),
+    "scheduler": ("restore", "pressure"),
+    "sched_scenario": ("completed", "sim_time_ns", "req_per_sim_s",
+                       "restore_stall_ns_total", "restore_inflight_ns",
+                       "overlap_ratio", "preemptions", "swap_out_bytes",
+                       "swap_in_bytes", "inflight_peak", "prefix_hits",
                        "replay_within_1pct"),
 }
 
@@ -104,6 +116,12 @@ def check_schema(out) -> list:
                 diff(f"topology[{t}][{mode}]", scen,
                      SCHEMA_KEYS["tier_scenario"]
                      + SCHEMA_KEYS["topology_extra"])
+        sched = tier.get("scheduler", {})
+        diff("cxl_tier.scheduler", sched, SCHEMA_KEYS["scheduler"])
+        for axis in ("restore", "pressure"):
+            for mode, scen in sched.get(axis, {}).items():
+                diff(f"scheduler[{axis}][{mode}]", scen,
+                     SCHEMA_KEYS["sched_scenario"])
     return errs
 
 
@@ -136,8 +154,8 @@ def _drive(eng, requests, *, max_ticks: int = 10_000):
     for req in requests:
         eng.submit(req)
     ticks = []
-    while (eng.queue or any(s is not None for s in eng.slots)) \
-            and len(ticks) < max_ticks:
+    while (eng.queue or any(s is not None for s in eng.slots)
+           or eng.scheduler.busy()) and len(ticks) < max_ticks:
         pf0 = eng.stats["prefill_dispatches"] + eng.stats["prefix_hits"]
         t0 = time.perf_counter()
         eng.step()
@@ -365,7 +383,8 @@ def _replay_ok(tier) -> bool:
         topology=tier.cfg.port_medias if tier.cfg.tagged else None,
         sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
         req_bytes=tier.cfg.req_bytes,
-        dram_cache_bytes=tier.cfg.dram_cache_bytes)
+        dram_cache_bytes=tier.cfg.dram_cache_bytes,
+        max_inflight=tier.cfg.max_inflight)
     return bool(np.allclose(np.asarray(tier.op_ns), oracle,
                             rtol=0.01, atol=1e-6))
 
@@ -389,6 +408,115 @@ TOPOLOGIES = {
     "3-port-hotness": {"topology": ("dram", "ssd-fast", "ssd-slow"),
                        "placement": "hotness"},
 }
+
+
+def _sched_metrics(eng, tier) -> dict:
+    """Scheduler-axis metrics for one finished engine run."""
+    sim_ns = max(tier.topo.now, 1e-9)
+    return {
+        "completed": len(eng.finished),
+        "sim_time_ns": round(tier.topo.now, 1),
+        "req_per_sim_s": round(len(eng.finished) / sim_ns * 1e9, 2),
+        "restore_stall_ns_total": round(eng.stats["restore_stall_ns"], 1),
+        "restore_inflight_ns": round(eng.stats["restore_inflight_ns"], 1),
+        "overlap_ratio": round(eng.stats["restore_overlap_ratio"], 4),
+        "preemptions": eng.stats["preemptions"],
+        "swap_out_bytes": eng.stats["swap_out_bytes"],
+        "swap_in_bytes": eng.stats["swap_in_bytes"],
+        "inflight_peak": eng.stats["sched_inflight_peak"],
+        "prefix_hits": eng.stats["prefix_hits"],
+        "replay_within_1pct": _replay_ok(tier),
+    }
+
+
+def bench_scheduler(params, cfg, rc, *, n_slots: int, max_seq: int,
+                    prompt_len: int, max_new: int, prefill_chunk: int,
+                    seed: int, step_ns: float = 100_000.0):
+    """The async/preemption axis of the request-lifecycle scheduler.
+
+    Axis 1 (``restore``) serves -> settles -> resubmits identical traffic
+    with blocking vs completion-based async restores; the gate is that
+    async mode's aggregate restore stall is strictly below blocking (the
+    fetch overlaps decode instead of stalling the batch). Axis 2
+    (``pressure``) pins long low-priority requests in every slot with a
+    queue of short high-priority requests behind them, run for a fixed
+    tick horizon under FIFO vs preempt+swap; the gate is that preemption
+    completes strictly more requests per simulated second. Both gates
+    also require every async op trace to replay within 1% of the scalar
+    oracle. Returns ``(section, acceptance)``.
+    """
+    from repro.core.tier import CxlTier, TierConfig
+    from repro.serving.engine import Request, ServingEngine
+
+    rng = np.random.default_rng(seed)
+    n_requests = n_slots * 2
+    prompts = [rng.integers(1, cfg.vocab_size, prompt_len).tolist()
+               for _ in range(n_requests)]
+    kw = dict(n_slots=n_slots, max_seq=max_seq, temperature=0.0,
+              seed=seed, prefill_chunk=prefill_chunk)
+
+    restore = {}
+    for mode in ("blocking", "async"):
+        tier = CxlTier(TierConfig(media="ssd-fast"))
+        eng = ServingEngine(params, cfg, rc, cxl_tier=tier,
+                            cxl_async=(mode == "async"), **kw)
+        _drive(eng, [Request(rid=i, prompt=p, max_new_tokens=max_new)
+                     for i, p in enumerate(prompts)])
+        for _ in range(500):           # settle staging into the cold tier
+            if not eng.flusher.pending:
+                break
+            tier.advance(step_ns)
+            eng.flusher.maybe_flush()
+        if eng.flusher.pending:
+            sys.exit(f"FAIL: scheduler staging did not drain ({mode})")
+        _drive(eng, [Request(rid=1000 + i, prompt=p, max_new_tokens=max_new)
+                     for i, p in enumerate(prompts)])
+        restore[mode] = _sched_metrics(eng, tier)
+
+    # pressure scenario: every slot pinned by a long low-priority decode
+    # (admitted and running before the short high-priority work arrives),
+    # then a fixed simulated horizon too short for any long to finish —
+    # FIFO pays for head-of-line blocking in completed requests, the
+    # preempting scheduler swaps the longs out and serves the shorts
+    long_new = min(6 * max_new, max_seq - 2 - prompt_len)
+    horizon = max(long_new - 16, 2 * max_new)
+    n_short = n_slots * 2
+    long_prompts = [rng.integers(1, cfg.vocab_size, prompt_len).tolist()
+                    for _ in range(n_slots)]
+    short_prompts = [rng.integers(1, cfg.vocab_size, prompt_len).tolist()
+                     for _ in range(n_short)]
+    pressure = {}
+    for mode, policy in (("fifo", "none"), ("preempt_swap", "swap")):
+        tier = CxlTier(TierConfig(media="ssd-fast"))
+        eng = ServingEngine(params, cfg, rc, cxl_tier=tier, cxl_async=True,
+                            preempt_policy=policy, **kw)
+        for i, p in enumerate(long_prompts):
+            eng.submit(Request(rid=i, prompt=p, priority=0,
+                               max_new_tokens=long_new))
+        eng.step(); eng.step()      # longs admitted and decoding
+        for i, p in enumerate(short_prompts):
+            eng.submit(Request(rid=100 + i, prompt=p, priority=1,
+                               max_new_tokens=4))
+        eng.run(max_ticks=horizon)
+        pressure[mode] = _sched_metrics(eng, tier)
+
+    acceptance = {
+        "sched_async_stall_below_blocking":
+            restore["async"]["restore_stall_ns_total"]
+            < restore["blocking"]["restore_stall_ns_total"],
+        "sched_async_all_resubmits_restored":
+            restore["async"]["prefix_hits"] == n_requests,
+        "sched_preempt_swap_higher_throughput":
+            pressure["preempt_swap"]["req_per_sim_s"]
+            > pressure["fifo"]["req_per_sim_s"],
+        "sched_preempt_swap_preempted":
+            pressure["preempt_swap"]["preemptions"] >= 1
+            and pressure["preempt_swap"]["swap_in_bytes"] > 0,
+        "sched_replay_within_1pct": all(
+            scen["replay_within_1pct"]
+            for per in (restore, pressure) for scen in per.values()),
+    }
+    return {"restore": restore, "pressure": pressure}, acceptance
 
 
 def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
@@ -468,6 +596,14 @@ def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
         topo["2-port-hetero"]["sr_on"]["restore_stall_ns_total"]
         < topo["1-port"]["sr_on"]["restore_stall_ns_total"])
     acceptance["topology_replay_within_1pct"] = replay_within_1pct
+
+    # the async/preemption axis: blocking vs async restores, FIFO vs
+    # preempt+swap under pressure (gates merged into this acceptance)
+    scheduler, sched_acceptance = bench_scheduler(
+        params, cfg, rc, n_slots=n_slots, max_seq=max_seq,
+        prompt_len=prompt_len, max_new=max_new,
+        prefill_chunk=prefill_chunk, seed=seed, step_ns=step_ns)
+    acceptance.update(sched_acceptance)
     return {
         "config": {"n_slots": n_slots, "n_requests": n_requests,
                    "prompt_len": prompt_len, "max_new_tokens": max_new,
@@ -475,6 +611,7 @@ def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
                    "seed": seed},
         "media_bins": bins,
         "topology": topo,
+        "scheduler": scheduler,
         "acceptance": acceptance,
     }
 
@@ -590,6 +727,13 @@ def main(argv=None) -> int:
         summary["cxl_tier_topology_stall_ns"] = {
             t: per["sr_on"]["restore_stall_ns_total"]
             for t, per in cxl_tier["topology"].items()}
+        summary["cxl_tier_scheduler"] = {
+            "restore_stall_ns": {
+                m: s["restore_stall_ns_total"]
+                for m, s in cxl_tier["scheduler"]["restore"].items()},
+            "pressure_req_per_sim_s": {
+                m: s["req_per_sim_s"]
+                for m, s in cxl_tier["scheduler"]["pressure"].items()}}
     print(json.dumps(summary, indent=2))
     if not acceptance["prefix_restore_zero_prefill"]:
         print("FAIL: resubmitted rid was not served via prefix restore",

@@ -55,8 +55,9 @@ import dataclasses
 import hashlib
 from typing import Dict, List, Optional, Tuple
 
-from repro.sim.engine import (PAGE_ADVANCE, PAGE_PREFETCH, PAGE_READ,
-                              PAGE_WRITE, Topology)
+from repro.sim.engine import (MAX_INFLIGHT_OPS, PAGE_ADVANCE, PAGE_PREFETCH,
+                              PAGE_READ, PAGE_READ_ASYNC, PAGE_WRITE,
+                              PAGE_WRITE_ASYNC, OpHandle, Topology)
 from repro.sim.media import resolve_media
 
 # Serving media bins -> simulator media parts (Table 1a). "ssd-fast" is the
@@ -116,6 +117,10 @@ class TierConfig:
     # one advance op per tick, so recording must not grow unboundedly.
     # Past the cap, ops are still charged but no longer recorded.
     trace_cap: int = 200_000
+    # per-port cap on outstanding async page ops: an async entry op whose
+    # port is saturated stalls at issue until a slot frees (the stall is
+    # the only latency charged at issue — see read_entry_async)
+    max_inflight: int = MAX_INFLIGHT_OPS
     # ---- multi-root-port topology -------------------------------------
     topology: Tuple[str, ...] = ()   # per-port media bins; () = single-port
     placement: str = "striped"       # striped | hashed | hotness
@@ -123,10 +128,13 @@ class TierConfig:
     hot_budget_bytes: int = 256 << 10   # fast-port residency budget
 
     def __post_init__(self):
-        """Validate the placement policy name early."""
+        """Validate the placement policy and async cap early."""
         if self.placement not in PLACEMENTS:
             raise ValueError(f"unknown placement {self.placement!r} "
                              f"(expected one of {PLACEMENTS})")
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1 "
+                             f"(got {self.max_inflight})")
 
     @property
     def media_name(self) -> str:
@@ -144,12 +152,46 @@ class TierConfig:
         return bool(self.topology)
 
 
+@dataclasses.dataclass
+class TierHandle:
+    """Completion handle for one async entry op (flush or restore fetch).
+
+    ``lanes`` holds one :class:`repro.sim.engine.OpHandle` per port
+    segment the entry spans; the op is complete once *every* lane's port
+    clock passes its completion (``CxlTier.poll``). ``issue_wait_ns`` is
+    the total in-flight-cap stall charged to the issuer (usually 0.0);
+    ``in_flight_ns`` the issue-to-slowest-lane-completion span — the
+    latency the scheduler gets to hide behind decode.
+    """
+
+    key: object
+    kind: int                     # PAGE_READ_ASYNC or PAGE_WRITE_ASYNC
+    nbytes: int
+    lanes: List[OpHandle]
+    issued_ns: float
+    done_ns: float                # slowest lane's completion timestamp
+    issue_wait_ns: float
+    retired: bool = False
+
+    @property
+    def in_flight_ns(self) -> float:
+        """Simulated ns the entry op was outstanding (issue -> done)."""
+        return self.done_ns - self.issued_ns
+
+
 class CxlTier:
     """Per-page latency accounting for the serving engine's tiered pages.
 
     One instance owns a :class:`repro.sim.engine.Topology` (a single port
     in legacy mode) plus the placement state mapping entry keys onto port
     segments. All returned latencies are simulated nanoseconds.
+
+    Entry ops come in two disciplines: blocking (``read_entry`` /
+    ``write_entry`` — the caller stalls for the slowest lane) and async
+    (``read_entry_async`` / ``write_entry_async`` — the media work rides
+    the port service cursors and the returned :class:`TierHandle` retires
+    as :meth:`advance` passes simulated time; only in-flight-cap issue
+    stalls are charged to the caller).
     """
 
     def __init__(self, config: TierConfig = TierConfig()):
@@ -157,7 +199,8 @@ class CxlTier:
         self.topo = Topology(config.port_medias, sr=config.sr_enabled,
                              ds=config.ds_enabled,
                              req_bytes=config.req_bytes,
-                             dram_cache_bytes=config.dram_cache_bytes)
+                             dram_cache_bytes=config.dram_cache_bytes,
+                             max_inflight=config.max_inflight)
         n = self.topo.n_ports
         # key -> [(port, base, capacity_bytes)] segments, striping order
         self._segments: Dict[object, List[Tuple[int, int, int]]] = {}
@@ -173,8 +216,12 @@ class CxlTier:
         self.ops: List[tuple] = []       # (kind,addr,nbytes) or port-tagged
         self.op_ns: List[float] = []     # charged latencies (ns)
         self.trace_truncated = False     # ops past trace_cap went unrecorded
+        self._port_stat_dicts: Optional[List[Dict[str, object]]] = None
         self.counters = {"reads": 0, "writes": 0, "prefetches": 0,
                          "read_ns": 0.0, "write_ns": 0.0,
+                         "async_reads": 0, "async_writes": 0,
+                         "async_read_ns": 0.0, "async_write_ns": 0.0,
+                         "issue_wait_ns": 0.0,
                          "deferred_admits": 0,
                          "promotions": 0, "demotions": 0,
                          "migrate_ns": 0.0}
@@ -285,6 +332,32 @@ class CxlTier:
             self.trace_truncated = True   # replay would diverge: say so
         return lat
 
+    def _charge_async(self, port: int, kind: int, addr: int,
+                      nbytes: int) -> OpHandle:
+        """Issue one async op on its port; the recorded latency is the
+        issue-slot wait (what the caller actually paid at issue)."""
+        handle = self.topo.issue(port, kind, addr, nbytes)
+        if len(self.ops) < self.cfg.trace_cap:
+            self.ops.append((port, kind, addr, nbytes) if self.cfg.tagged
+                            else (kind, addr, nbytes))
+            self.op_ns.append(handle.wait_ns)
+        else:
+            self.trace_truncated = True
+        return handle
+
+    def _issue_entry(self, key, nbytes: int, kind: int) -> TierHandle:
+        """Issue one async entry op across the entry's port segments."""
+        lanes = []
+        for port, addr, n in self._place(key, nbytes):
+            lanes.append(self._charge_async(port, kind, addr, n))
+        handle = TierHandle(
+            key=key, kind=kind, nbytes=int(nbytes), lanes=lanes,
+            issued_ns=min(h.issued_ns for h in lanes),
+            done_ns=max(h.done_ns for h in lanes),
+            issue_wait_ns=sum(h.wait_ns for h in lanes))
+        self.counters["issue_wait_ns"] += handle.issue_wait_ns
+        return handle
+
     # ----------------------------------------------------------- page ops
     def write_entry(self, key, nbytes: int) -> float:
         """Flush an entry's pages to its port EPs; returns writer-held ns.
@@ -318,6 +391,50 @@ class CxlTier:
             self._heat[key] = self._heat.get(key, 0) + 1
             self._rebalance(key, nbytes)
         return stall
+
+    def write_entry_async(self, key, nbytes: int) -> TierHandle:
+        """Background flush: issue the entry's page writes without holding
+        the writer. Returns a :class:`TierHandle`; the writer is charged
+        only the issue-slot wait (``handle.issue_wait_ns``), the media
+        work completes on the port cursors as simulated time passes.
+        """
+        handle = self._issue_entry(key, nbytes, PAGE_WRITE_ASYNC)
+        self.counters["async_writes"] += 1
+        self.counters["async_write_ns"] += handle.in_flight_ns
+        return handle
+
+    def read_entry_async(self, key, nbytes: int) -> TierHandle:
+        """Non-blocking demand fetch: issue the entry's lane reads and
+        return the completion handle instead of stalling for them.
+
+        The caller pays only the issue-slot wait; the fetch itself is
+        outstanding until every lane's port clock passes its completion
+        (:meth:`poll` after :meth:`advance` ticks) — the window a
+        scheduler hides behind decode. Hotness heat/rebalancing applies
+        exactly as for the blocking read.
+        """
+        handle = self._issue_entry(key, nbytes, PAGE_READ_ASYNC)
+        self.counters["async_reads"] += 1
+        self.counters["async_read_ns"] += handle.in_flight_ns
+        if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
+            self._heat[key] = self._heat.get(key, 0) + 1
+            self._rebalance(key, nbytes)
+        return handle
+
+    def poll(self, handle: TierHandle) -> bool:
+        """True once every lane of an async entry op has completed."""
+        if handle.retired:
+            return True
+        done = True
+        for lane in handle.lanes:
+            if not self.topo.poll(lane):
+                done = False
+        handle.retired = done
+        return done
+
+    def inflight_ops(self) -> int:
+        """Async page ops still outstanding across the topology."""
+        return self.topo.inflight_depth()
 
     def speculative_read(self, key, nbytes: int) -> None:
         """MemSpecRd the entry's port ranges ahead of the demand fetch."""
@@ -412,30 +529,41 @@ class CxlTier:
                    for p in self.topo.ports)
 
     def port_stats(self) -> List[Dict[str, object]]:
-        """Per-port telemetry: occupancy, queue depth, DevLoad, SR hits."""
-        out = []
+        """Per-port telemetry: occupancy, queue depth, DevLoad, SR hits,
+        async in-flight depth.
+
+        Cheap and live: the per-port dicts are allocated once and updated
+        in place, so this is safe to call every decode tick (no drain
+        barrier, no per-tick allocation churn) — the scheduler and the
+        ``launch/serve.py`` stats line read it mid-run.
+        """
+        if self._port_stat_dicts is None:
+            self._port_stat_dicts = [{"port": i,
+                                      "media": p.ep.media.name}
+                                     for i, p in enumerate(self.topo.ports)]
         for i, p in enumerate(self.topo.ports):
             ep, ctl = p.ep, p.ctl
             reads = ep.stats["reads"]
-            out.append({
-                "port": i,
-                "media": ep.media.name,
-                "now_ns": p.now,
-                "live_bytes": self._live_bytes[i],
-                "ep_reads": reads,
-                "ep_writes": ep.stats["writes"],
-                "ep_prefetches": ep.stats["prefetches"],
-                "sr_hit_rate": ep.stats["hits"] / reads if reads else 0.0,
-                "gc_events": ep.stats["gc_events"],
-                "staging_occupancy":
-                    len(ctl.staging) / ctl.staging_capacity,
-                "queue_depth": len(ctl.memory_queue),
-                "devload": int(ctl.qos.last_devload),
-            })
-        return out
+            d = self._port_stat_dicts[i]
+            d["now_ns"] = p.now
+            d["live_bytes"] = self._live_bytes[i]
+            d["ep_reads"] = reads
+            d["ep_writes"] = ep.stats["writes"]
+            d["ep_prefetches"] = ep.stats["prefetches"]
+            d["sr_hit_rate"] = ep.stats["hits"] / reads if reads else 0.0
+            d["gc_events"] = ep.stats["gc_events"]
+            d["staging_occupancy"] = len(ctl.staging) / ctl.staging_capacity
+            d["queue_depth"] = len(ctl.memory_queue)
+            d["devload"] = int(ctl.qos.last_devload)
+            d["inflight"] = p.inflight_depth()
+        return self._port_stat_dicts
 
     def snapshot(self) -> Dict[str, object]:
-        """One flat dict of tier state for stats lines / bench artifacts."""
+        """One flat dict of tier state for stats lines / bench artifacts.
+
+        Cheap and callable mid-run: reads live clocks and counters (via
+        the in-place :meth:`port_stats` view) — no drain barrier.
+        """
         ports = self.port_stats()
         return {
             "media": "+".join(p["media"] for p in ports)
@@ -454,6 +582,10 @@ class CxlTier:
             "promotions": self.counters["promotions"],
             "demotions": self.counters["demotions"],
             "migrate_ns": self.counters["migrate_ns"],
+            "async_reads": self.counters["async_reads"],
+            "async_writes": self.counters["async_writes"],
+            "issue_wait_ns": self.counters["issue_wait_ns"],
+            "inflight_ops": self.inflight_ops(),
             "sr_hit_rate": self.sr_hit_rate(),
             "ep_prefetches": sum(p["ep_prefetches"] for p in ports),
             "gc_events": sum(p["gc_events"] for p in ports),

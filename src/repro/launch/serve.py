@@ -8,7 +8,10 @@ prefix restores are charged against the simulated endpoint and the
 restore stall / SR hit rate are reported alongside throughput.
 ``--cxl-topology dram,ssd-fast`` attaches a multi-root-port tier
 instead (``--cxl-placement`` picks striped / hashed / hotness) and adds
-a per-port stats line.
+a per-port stats line. ``--cxl-async`` switches the tier to
+completion-based async I/O (restores overlap decode instead of stalling
+the batch) and ``--preempt-policy swap|recompute`` enables preemptive
+scheduling under slot pressure; both add a scheduler stats line.
 """
 from __future__ import annotations
 
@@ -29,14 +32,19 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           n_slots: int = 4, max_seq: int = 128, max_new: int = 12,
           prompt_len: int = 6, seed: int = 0,
           cxl_media: str = "", cxl_sr: bool = True,
-          cxl_topology: str = "", cxl_placement: str = "striped"):
+          cxl_topology: str = "", cxl_placement: str = "striped",
+          cxl_async: bool = False, preempt_policy: str = "none"):
     """Serve ``n_requests`` random prompts through the tiered engine.
 
     ``cxl_media`` attaches a single-port CXL-timed tier; ``cxl_topology``
     (comma-separated media bins, e.g. ``"dram,ssd-fast"``) attaches a
     multi-root-port tier instead, with ``cxl_placement`` choosing how
     entries spread across the ports (striped / hashed / hotness).
-    Returns ``(engine, finished_requests)``.
+    ``cxl_async`` switches restores and flushes to completion-based
+    async tier I/O (media latency hidden behind decode);
+    ``preempt_policy`` (``swap`` / ``recompute``) lets the scheduler
+    evict low-priority slots under pressure. Returns
+    ``(engine, finished_requests)``.
     """
     cfg = registry.smoke(arch) if smoke else registry.get(arch)
     mesh = make_host_mesh() if smoke else make_production_mesh()
@@ -51,7 +59,9 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
     with jax.set_mesh(mesh):
         params = M.init_model(jax.random.PRNGKey(seed), cfg)
         engine = ServingEngine(params, cfg, rc, n_slots=n_slots,
-                               max_seq=max_seq, cxl_tier=tier)
+                               max_seq=max_seq, cxl_tier=tier,
+                               cxl_async=cxl_async,
+                               preempt_policy=preempt_policy)
         import numpy as np
         rng = np.random.default_rng(seed)
         for rid in range(n_requests):
@@ -76,13 +86,25 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
         snap = tier.snapshot()
         print(f"[serve] cxl tier ({snap['media']}, "
               f"SR {'on' if cxl_sr else 'off'}): "
-              f"{snap['writes']} page flushes "
+              f"{snap['writes'] + snap['async_writes']} page flushes "
               f"({snap['write_ns'] / 1e3:.0f}us held), "
-              f"{snap['reads']} cold restores stalling "
+              f"{snap['reads'] + snap['async_reads']} cold restores "
+              f"stalling "
               f"{engine.stats['restore_stall_ns'] / 1e3:.0f}us total, "
               f"SR hit rate {snap['sr_hit_rate']:.2f}, "
               f"{engine.stats['flushes_deferred']} flush windows deferred "
               f"by the EP, {snap['gc_events']} internal tasks")
+        if cxl_async or preempt_policy != "none":
+            st = engine.stats
+            print(f"[serve] scheduler (async {'on' if cxl_async else 'off'}"
+                  f", policy {preempt_policy}): "
+                  f"{st['preemptions']} preemptions, "
+                  f"{st['swap_out_bytes'] / 1024:.0f} KiB swapped out / "
+                  f"{st['swap_in_bytes'] / 1024:.0f} KiB back in, "
+                  f"restore overlap {st['restore_overlap_ratio']:.2f} "
+                  f"({st['restore_inflight_ns'] / 1e3:.0f}us in flight), "
+                  f"peak {st['sched_inflight_peak']} in-flight tier ops, "
+                  f"{st['sim_time_ns'] / 1e6:.2f}ms simulated")
         if tier.cfg.tagged:
             print(f"[serve] topology ({snap['placement']} placement, "
                   f"{snap['promotions']} promotions / "
@@ -93,7 +115,8 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
                       f"SR hit rate {p['sr_hit_rate']:.2f}, "
                       f"{p['live_bytes'] / 1024:.0f} KiB live, "
                       f"devload {p['devload']}, "
-                      f"staging {p['staging_occupancy']:.2f}")
+                      f"staging {p['staging_occupancy']:.2f}, "
+                      f"{p['inflight']} in flight")
     return engine, finished
 
 
@@ -116,11 +139,22 @@ def main() -> None:
     ap.add_argument("--cxl-placement", default="striped",
                     choices=["striped", "hashed", "hotness"],
                     help="entry placement across the topology's ports")
+    ap.add_argument("--cxl-async", action="store_true",
+                    help="completion-based async tier I/O: restores no "
+                         "longer stall the batch (the slot activates when "
+                         "the fetch lands) and flushes run in background")
+    ap.add_argument("--preempt-policy", default="none",
+                    choices=["none", "swap", "recompute"],
+                    help="preempt the lowest-priority slot under queue "
+                         "pressure: swap its KV pages to the CXL tier "
+                         "(swap) or drop and re-prefill on resume "
+                         "(recompute)")
     args = ap.parse_args()
     serve(args.arch, smoke=args.smoke, n_requests=args.requests,
           n_slots=args.slots, max_new=args.max_new,
           cxl_media=args.cxl_media, cxl_sr=not args.cxl_sr_off,
-          cxl_topology=args.cxl_topology, cxl_placement=args.cxl_placement)
+          cxl_topology=args.cxl_topology, cxl_placement=args.cxl_placement,
+          cxl_async=args.cxl_async, preempt_policy=args.preempt_policy)
 
 
 if __name__ == "__main__":

@@ -41,6 +41,18 @@ The hot path is device-resident:
    pages into the slot (the speculative-read fetch) with zero prefill
    dispatches.
 
+Admission is owned by the request-lifecycle scheduler
+(``repro.serving.scheduler``): requests move through an explicit state
+machine (QUEUED -> RESTORING -> RUNNING -> PREEMPTED/SWAPPED ->
+RETIRED). With ``cxl_async=True`` cold-tier restores are issued as
+completion-based async ops — the slot sits RESTORING while the rest of
+the batch decodes, hiding the media latency — and flushes become
+background ops; ``preempt_policy`` ("swap"/"recompute") lets the
+scheduler evict a low-priority slot to the CXL tier under pressure and
+admit queued work instead of idling. The defaults (``cxl_async=False``,
+``preempt_policy="none"``) reproduce the blocking greedy-FIFO engine
+bit-for-bit.
+
 ``legacy_host_path=True`` preserves the pre-rewrite hot path (per-token
 prefill dispatches, host softmax/numpy sampling, per-tick logits
 transfer + sync) as the measured baseline for ``benchmarks/serve_bench``.
@@ -49,7 +61,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -62,6 +73,7 @@ from repro.core.qos import DevLoad, QoSController
 from repro.core.tier import CxlTier
 from repro.models import model as M
 from repro.parallel import sharding as shlib
+from repro.serving import scheduler as sched
 
 
 @dataclasses.dataclass
@@ -70,15 +82,21 @@ class Request:
 
     ``restore_stall_ns`` is the simulated CXL demand-fetch stall (ns)
     charged when the request was served via a cold-tier prefix restore
-    (0.0 otherwise or without an attached tier).
+    (0.0 otherwise or without an attached tier). ``priority`` orders
+    admission (higher first, FIFO among equals) and marks preemption
+    victims; ``state`` walks the scheduler's lifecycle (QUEUED ->
+    RESTORING -> RUNNING -> PREEMPTED/SWAPPED -> RETIRED, see
+    ``repro.serving.scheduler``).
     """
 
     rid: int
     prompt: List[int]
     max_new_tokens: int = 16
+    priority: int = 0
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     slot: Optional[int] = None
+    state: str = sched.QUEUED       # scheduler lifecycle state
     restored: bool = False          # served via prefix restore (no prefill)
     restore_stall_ns: float = 0.0   # simulated CXL fetch stall (cold-tier
                                     # restore through the CxlTier, else 0)
@@ -179,7 +197,9 @@ class ServingEngine:
                  legacy_host_path: bool = False,
                  sync_prefill: bool = False,
                  cxl_tier: Optional[CxlTier] = None,
-                 tier_step_ns: float = 100_000.0):
+                 tier_step_ns: float = 100_000.0,
+                 cxl_async: bool = False,
+                 preempt_policy: str = "none"):
         self.params = params
         self.cfg = cfg
         self.rc = rc
@@ -215,6 +235,19 @@ class ServingEngine:
         # the EP's announced state gates the flusher's admission window.
         self.tier = cxl_tier
         self.tier_step_ns = tier_step_ns
+        self.cxl_async = bool(cxl_async)
+        self._restorable = cfg.family in _RESTORABLE_FAMILIES
+        if legacy_host_path and (cxl_async or preempt_policy != "none"):
+            raise ValueError("the legacy host path is the frozen baseline: "
+                             "cxl_async / preempt_policy need the "
+                             "device-resident engine")
+        # request-lifecycle scheduler: admission, async restore
+        # activation and preemption decisions live there; with async off
+        # and preempt_policy="none" it reproduces the old greedy-FIFO
+        # blocking admission exactly.
+        self.scheduler = sched.RequestScheduler(
+            self, async_restore=self.cxl_async,
+            preempt_policy=preempt_policy)
         self.store = HostPageStore(budget_bytes=store_budget_bytes,
                                    on_evict=self._drop_prompt_alias)
         self._prompt_index: Dict[Tuple[int, ...], int] = {}
@@ -251,10 +284,24 @@ class ServingEngine:
                       "tier_store_occupancy": 0.0, "flush_backlog": 0,
                       "flushes_deferred": 0,
                       # per-root-port telemetry (multi-port topologies):
-                      # occupancy, queue depth, DevLoad, SR hit rate per
-                      # port, materialized when run() drains (live view:
-                      # tier.port_stats())
-                      "tier_ports": []}
+                      # occupancy, queue depth, DevLoad, SR hit rate and
+                      # async in-flight depth per port — refreshed live
+                      # every tick (tier.port_stats() is an in-place
+                      # updated view, so this is allocation-free)
+                      "tier_ports": [],
+                      # request-lifecycle scheduler telemetry: preempted
+                      # slots, page bytes swapped out/in through the
+                      # tier, total async restore in-flight ns and the
+                      # fraction of it hidden behind decode (1.0 = fully
+                      # overlapped), plus current/peak outstanding async
+                      # tier ops and the tier's simulated clock at the
+                      # last tick (requests per simulated second =
+                      # completed / sim_time_ns)
+                      "preemptions": 0, "swap_out_bytes": 0,
+                      "swap_in_bytes": 0, "restore_inflight_ns": 0.0,
+                      "restore_overlap_ratio": 0.0,
+                      "sched_inflight_ops": 0, "sched_inflight_peak": 0,
+                      "sim_time_ns": 0.0}
 
     # ----------------------------------------------------------- step fns
     def _step(self, params, cache, tokens):
@@ -345,9 +392,15 @@ class ServingEngine:
                                   if p != q), a, b)
         return self._baxes
 
-    def _prefill_slot(self, req: Request, slot: int) -> None:
-        """Chunked device-resident prefill: one dispatch per chunk."""
-        prompt = list(req.prompt)
+    def _prefill_slot(self, req: Request, slot: int,
+                      tokens: Optional[List[int]] = None) -> None:
+        """Chunked device-resident prefill: one dispatch per chunk.
+
+        ``tokens`` overrides the ingested sequence (default: the
+        request's prompt) — the recompute-resume path feeds the prompt
+        plus the already-generated prefix through the same chunked path.
+        """
+        prompt = list(req.prompt) if tokens is None else list(tokens)
         if len(prompt) + 1 > self.max_seq:
             raise ValueError(f"prompt ({len(prompt)} tokens) does not fit "
                              f"a {self.max_seq}-token slot")
@@ -415,15 +468,22 @@ class ServingEngine:
     def _store_key(self, rid: int, prompt: Tuple[int, ...]) -> Optional[int]:
         """Cold-tier key holding pages for (rid, prompt), else None.
 
-        A probe, not a use: reads ``store.pages`` directly so queue-time
-        SR lookups do not perturb LRU recency."""
+        A *confirmed* hit refreshes the entry's LRU recency (via
+        ``store.get``): the queued request will demand-fetch exactly
+        those pages at admission, ticks from now — without the touch a
+        hot, about-to-be-restored prefix could age out behind entries no
+        one is waiting for, turning the queued SR into a wasted prefetch
+        and the restore into a full re-prefill. Mismatched probes still
+        read ``store.pages`` directly and leave recency alone."""
         entry = self.store.pages.get(rid)
         if entry is not None and entry.get("prompt") == prompt:
+            self.store.get(rid)
             return rid
         alias = self._prompt_index.get(prompt)
         if alias is not None:
             entry = self.store.pages.get(alias)
             if entry is not None and entry.get("prompt") == prompt:
+                self.store.get(alias)
                 return alias
         return None
 
@@ -448,8 +508,23 @@ class ServingEngine:
                 return entry, alias, "store"
         return None, None, None
 
-    def _try_restore(self, req: Request, slot: int) -> bool:
-        """Speculative-read fetch: rebuild the slot from retired pages.
+    def _restore_lookup(self, req: Request):
+        """Restorable (entry, store_key, source) for ``req``, else None.
+
+        Pure lookup — no timing is charged; the scheduler decides whether
+        the fetch is blocking or issued asynchronously."""
+        if not self._restorable:
+            return None
+        entry, key, source = self._lookup_pages(req.rid, tuple(req.prompt))
+        if entry is None or "pos" not in entry or "first_token" not in entry:
+            return None
+        if int(entry["pos"]) >= self.max_seq - 1:
+            return None                       # no room left to decode into
+        return entry, key, source
+
+    def _apply_restore(self, req: Request, slot: int, entry) -> None:
+        """Rebuild the slot from a retired entry (the data half of the
+        speculative-read fetch; any simulated stall was already charged).
 
         The stored entry captures the *post-prefill* state — pages plus
         the prompt's first sampled token at pos=len(prompt) — so a
@@ -457,21 +532,6 @@ class ServingEngine:
         (greedy-identical to a fresh prefill) rather than extending the
         previous generation.
         """
-        if self.cfg.family not in _RESTORABLE_FAMILIES:
-            return False
-        entry, key, source = self._lookup_pages(req.rid, tuple(req.prompt))
-        if entry is None or "pos" not in entry or "first_token" not in entry:
-            return False
-        if int(entry["pos"]) >= self.max_seq - 1:
-            return False                      # no room left to decode into
-        if self.tier is not None and source == "store":
-            # the speculative-read fetch: the slot stalls for the simulated
-            # CXL demand reads (fast when the queue-time MemSpecRd already
-            # filled the EP's internal DRAM). Staging hits stay free — the
-            # deterministic store keeps those pages in reserved GPU memory.
-            stall = self.tier.read_entry(key, CxlTier.entry_bytes(entry))
-            req.restore_stall_ns = stall
-            self.stats["restore_stall_ns"] += stall
         first = int(entry["first_token"])
         kv = jax.tree_util.tree_map(jnp.asarray, entry["kv"])
         self.cache["kv"] = jax.tree_util.tree_map(
@@ -487,23 +547,64 @@ class ServingEngine:
         req.generated = req.generated + [first]
         req._n_gen = 1
         req._n_dec = 0
-        return True
 
-    def _admit(self) -> None:
-        for slot in range(self.n_slots):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            req.slot = slot
-            self.slots[slot] = req
-            t0 = time.perf_counter()
-            if not self.legacy and self._try_restore(req, slot):
-                self.stats["prefix_hits"] += 1
-            elif self.legacy:
-                self._prefill_slot_legacy(req, slot)
-            else:
-                self._prefill_slot(req, slot)
-            self.stats["prefill_time_s"] += time.perf_counter() - t0
+    # -------------------------------------------------- preemption state
+    def _capture_slot_kv(self, slot: int):
+        """This slot's KV pages as a host-free pytree view (or None)."""
+        if "kv" not in self.cache:
+            return None
+        return jax.tree_util.tree_map(
+            lambda a: a[:, slot] if a.ndim > 1 else a[slot],
+            self.cache["kv"])
+
+    def _capture_swap_entry(self, req: Request, slot: int) -> Dict:
+        """Snapshot a running slot's mid-decode state for swap-out:
+        pages, current position and the last sampled token — everything a
+        swap-in needs to continue the stream bit-for-bit (greedy)."""
+        kv = self._capture_slot_kv(slot)
+        if kv is not None:
+            kv = jax.tree_util.tree_map(np.asarray, kv)
+        return {"kv": kv, "pos": self._pos_host[slot],
+                "last_token": req.generated[-1] if req.generated else 0,
+                "prompt": tuple(req.prompt)}
+
+    def _apply_swap_in(self, req: Request, slot: int, entry) -> None:
+        """Resume a swapped-out request: pages, position and last token
+        back into the slot; decode continues where it was preempted."""
+        kv = jax.tree_util.tree_map(jnp.asarray, entry["kv"])
+        self.cache["kv"] = jax.tree_util.tree_map(
+            lambda a, h: a.at[:, slot].set(h.astype(a.dtype)),
+            self.cache["kv"], kv)
+        pos = int(entry["pos"])
+        self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
+        self.last_tokens = self.last_tokens.at[slot].set(
+            int(entry["last_token"]))
+        self._pos_host[slot] = pos
+        req._first_tok = None
+        req._start_tick = self._tick
+        req._n_gen = len(req.generated)
+        req._n_dec = 0
+
+    def _recompute_resume(self, req: Request, slot: int) -> None:
+        """Resume a recompute-preempted request by re-prefilling the
+        prompt plus the already-generated prefix (pages were dropped at
+        preemption — the compute-for-capacity trade of the policy flag).
+
+        The chunked prefill re-derives the KV for every consumed token;
+        its re-sampled final token is discarded — the stream already
+        holds it (``generated[-1]``), which becomes the next decode
+        input, so the greedy continuation is unchanged.
+        """
+        if not req.generated:             # preempted pre-prefill: fresh
+            self._prefill_slot(req, slot)
+            return
+        fed = list(req.prompt) + req.generated[:-1]
+        self._prefill_slot(req, slot, tokens=fed)
+        req._first_tok = None             # drop the re-sampled duplicate
+        self.stats["decode_tokens"] -= 1
+        req._n_gen = len(req.generated)
+        self.last_tokens = self.last_tokens.at[slot].set(
+            int(req.generated[-1]))
 
     # ----------------------------------------------------------- advance
     def _advance(self) -> None:
@@ -561,6 +662,21 @@ class ServingEngine:
         return out
 
     # -------------------------------------------------------------- run
+    def _materialize_tokens(self, req: Request, slot: int) -> None:
+        """Pull the request's sampled tokens off the device trace into
+        ``req.generated`` (retirement and swap-out both need the stream
+        on the host); resets the trace span so a resumed request appends
+        cleanly."""
+        toks: List[int] = []
+        if req._first_tok is not None:
+            toks.append(int(np.asarray(req._first_tok)))
+        for t in range(req._start_tick, req._start_tick + req._n_dec):
+            toks.append(int(self._tok_tick(t)[slot]))
+        req.generated = req.generated + toks
+        req._first_tok = None
+        req._start_tick = self._tick
+        req._n_dec = 0
+
     def _retire(self, slot: int) -> None:
         """Deterministic store: release the slot immediately; its pages
         flush to the host tier in the background. The only host transfers
@@ -568,17 +684,10 @@ class ServingEngine:
         retiring pages."""
         req = self.slots[slot]
         req.done = True
+        req.state = sched.RETIRED
         if not self.legacy:
-            toks: List[int] = []
-            if req._first_tok is not None:
-                toks.append(int(np.asarray(req._first_tok)))
-            for t in range(req._start_tick, req._start_tick + req._n_dec):
-                toks.append(int(self._tok_tick(t)[slot]))
-            req.generated = req.generated + toks
-            req._first_tok = None
-        kv_slot = jax.tree_util.tree_map(
-            lambda a: a[:, slot] if a.ndim > 1 else a[slot],
-            self.cache["kv"]) if "kv" in self.cache else None
+            self._materialize_tokens(req, slot)
+        kv_slot = self._capture_slot_kv(slot)
         if kv_slot is not None and req.generated:
             # snapshot the post-prefill state: pages + the prompt's first
             # sampled token at pos=len(prompt). Pages beyond the prompt
@@ -621,9 +730,18 @@ class ServingEngine:
     def _store_sink(self, rid: int, entry) -> None:
         if self.tier is not None:
             # the background drain: page writes ride the deterministic-
-            # store path (GPU-speed completion, divert under congestion)
-            self.stats["tier_write_ns"] += self.tier.write_entry(
-                rid, CxlTier.entry_bytes(entry))
+            # store path (GPU-speed completion, divert under congestion).
+            # In async mode the flush is a background op — the writer is
+            # held only for the issue-slot wait and the media work
+            # completes on the port cursors as simulated time passes.
+            nbytes = CxlTier.entry_bytes(entry)
+            if self.cxl_async:
+                handle = self.tier.write_entry_async(rid, nbytes)
+                self.stats["tier_write_ns"] += handle.issue_wait_ns
+                self.scheduler._note_inflight_peak()
+            else:
+                self.stats["tier_write_ns"] += self.tier.write_entry(
+                    rid, nbytes)
         kept = self.store.put(rid, entry)
         # alias only entries that survived admission: budget pressure can
         # evict an entry during its own put (oversized, or a re-staged rid
@@ -644,14 +762,26 @@ class ServingEngine:
             self._retire(slot)
 
     def step(self) -> None:
-        """One engine tick: admit, decode, retire, background-flush."""
-        self._admit()
+        """One engine tick: schedule (activate/preempt/admit), decode,
+        retire, background-flush.
+
+        A slot whose restore is still in flight does not stall the
+        batch: the other slots keep decoding and the slot activates on
+        the tick its completion lands. Only when *every* occupied slot
+        is awaiting a fetch does the tick idle — that simulated time is
+        exposed stall, accounted against the overlap ratio."""
+        self.scheduler.begin_tick()
         for slot in range(self.n_slots):
             if self.slots[slot] is not None:
                 self._check_done(slot)   # prefill/restore may already satisfy
-        if not any(s is not None for s in self.slots):
+        active = any(s is not None for s in self.slots)
+        if not active and not self.scheduler.busy():
             return
-        if self.legacy:
+        if not active:
+            # all occupied slots are RESTORING: the batch idles this tick
+            # while simulated time (below) brings the completions closer
+            self.scheduler.note_blocked_tick(self.tier_step_ns)
+        elif self.legacy:
             sampled = self._advance_legacy()
             for slot, tok in sampled.items():
                 req = self.slots[slot]
@@ -674,37 +804,48 @@ class ServingEngine:
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions
 
-    def _tier_tick(self, refresh_ports: bool = False) -> None:
-        """Advance simulated time one engine tick and surface tier state.
+    def _tier_tick(self) -> None:
+        """Advance simulated time one engine tick and surface tier +
+        scheduler state.
 
-        With a multi-port tier attached this is also the drain barrier:
-        per-port clocks (which overlap freely within a tick) realign.
-        The per-port telemetry list (occupancy, queue depth, DevLoad, SR
-        hit rate) is only materialized into ``stats["tier_ports"]`` when
-        ``refresh_ports`` is set — ``run()`` does so on drain; building N
-        dicts per decode tick would be pure hot-loop overhead (read
-        ``tier.port_stats()`` directly for a live view).
-        """
+        With a multi-port tier attached this is also the blocking-op
+        drain barrier: per-port clocks (which skew freely within a tick)
+        realign, while async op handles keep riding the service cursors
+        until simulated time reaches their completions. All surfaced
+        telemetry is live and cheap — ``tier.port_stats()`` updates its
+        per-port dicts in place, so reading it every tick costs no
+        allocation churn and no drain."""
         self.stats["flush_backlog"] = len(self.flusher.pending)
+        ss = self.scheduler.stats
+        self.stats["preemptions"] = ss["preemptions"]
+        self.stats["swap_out_bytes"] = ss["swap_out_bytes"]
+        self.stats["swap_in_bytes"] = ss["swap_in_bytes"]
+        self.stats["restore_inflight_ns"] = ss["restore_inflight_ns"]
+        infl = ss["restore_inflight_ns"]
+        self.stats["restore_overlap_ratio"] = max(
+            0.0, 1.0 - ss["restore_exposed_ns"] / infl) if infl > 0 else 0.0
+        self.stats["sched_inflight_peak"] = ss["inflight_peak"]
         if self.tier is None:
             return
         self.tier.advance(self.tier_step_ns)
+        self.stats["sim_time_ns"] = self.tier.topo.now
+        self.stats["sched_inflight_ops"] = self.tier.inflight_ops()
         self.stats["tier_sr_hit_rate"] = self.tier.sr_hit_rate()
         self.stats["tier_store_occupancy"] = self.tier.store_occupancy()
-        if refresh_ports:
-            self.stats["tier_ports"] = self.tier.port_stats()
+        self.stats["tier_ports"] = self.tier.port_stats()
         self.stats["flushes_deferred"] = self.flusher.deferred
 
     def run(self, max_ticks: int = 1000) -> List[Request]:
-        """Tick until the queue and slots drain (or ``max_ticks``);
-        returns the finished requests in retirement order."""
+        """Tick until the queue, slots and in-flight restores drain (or
+        ``max_ticks``); returns the finished requests in retirement
+        order."""
         ticks = 0
-        while (self.queue or any(s is not None for s in self.slots)) \
-                and ticks < max_ticks:
+        while (self.queue or any(s is not None for s in self.slots)
+               or self.scheduler.busy()) and ticks < max_ticks:
             self.step()
             ticks += 1
         self.flusher.maybe_flush()
-        self._tier_tick(refresh_ports=True)
+        self._tier_tick()
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions
         return self.finished

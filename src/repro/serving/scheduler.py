@@ -1,0 +1,287 @@
+"""Request-lifecycle scheduler: preemptive admission over the serving slots.
+
+The serving engine used to admit greedily (FIFO into the first free
+slot) and charge every cold-tier restore as a synchronous stall at admit
+time. This module rebuilds admission as an explicit state machine over
+:class:`~repro.serving.engine.Request`:
+
+::
+
+            submit                    admission
+    QUEUED ─────────► (scheduler) ──┬──────────────────► RUNNING
+                                    │ staging hit / blocking restore /
+                                    │ prefill — slot active immediately
+                                    │
+                                    │ async cold-tier fetch issued
+                                    └─► RESTORING ──completion──► RUNNING
+    RUNNING ──preempt, swap policy──────► SWAPPED ───► QUEUED (requeued)
+    RUNNING ──preempt, recompute policy─► PREEMPTED ─► QUEUED (requeued)
+    RUNNING ──max tokens / position bound───────────────────────► RETIRED
+
+Two mechanisms hide the expansion tier's media latency behind decode:
+
+ * **asynchronous restore** (``async_restore=True``): a cold-tier prefix
+   fetch is issued through ``CxlTier.read_entry_async`` and the slot sits
+   in RESTORING while *the rest of the batch keeps decoding*; the slot
+   activates on the tick the completion lands. Only in-flight-cap issue
+   stalls (plus any tick where every occupied slot was RESTORING) are
+   exposed — the rest of the fetch overlaps decode, which is exactly the
+   paper's speculative-read/deterministic-store claim lifted to request
+   granularity.
+ * **preemption** (``preempt_policy``): under slot pressure — queued work
+   with strictly higher priority than the lowest-priority running slot
+   and no free capacity — the victim's pages swap *out* to the CXL tier
+   (``"swap"``: KV pages charged as an async flush, token progress kept)
+   or are dropped (``"recompute"``: only the token stream is kept and the
+   prompt + generated prefix is re-prefilled on resume). The freed slot
+   admits the queued request instead of idling behind a long decode.
+
+All scheduling state lives here; the engine keeps owning the cache, the
+slots and the jitted hot path. ``preempt_policy="none"`` with
+``async_restore=False`` reproduces the pre-scheduler engine exactly
+(same admission order, same charges, same tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict
+
+from repro.core.tier import CxlTier
+
+# Request.state values (plain strings so Request stays a simple dataclass)
+QUEUED = "QUEUED"
+RESTORING = "RESTORING"
+RUNNING = "RUNNING"
+PREEMPTED = "PREEMPTED"
+SWAPPED = "SWAPPED"
+RETIRED = "RETIRED"
+
+PREEMPT_POLICIES = ("none", "swap", "recompute")
+
+
+@dataclasses.dataclass
+class _InflightRestore:
+    """One slot's outstanding async fetch (prefix restore or swap-in)."""
+
+    req: object
+    slot: int
+    entry: dict
+    handle: object                # repro.core.tier.TierHandle
+    mode: str                     # "restore" | "swap"
+
+
+class RequestScheduler:
+    """Preemptive request-lifecycle scheduler over one ``ServingEngine``.
+
+    Owns the QUEUED/RESTORING/SWAPPED bookkeeping and the per-tick
+    scheduling pass (:meth:`begin_tick`); delegates cache surgery and
+    tier charging to the engine's helpers. ``stats`` accumulates the
+    scheduler telemetry the engine surfaces (preemptions, swap bytes,
+    in-flight restore time, exposed stall).
+    """
+
+    def __init__(self, engine, *, async_restore: bool = False,
+                 preempt_policy: str = "none"):
+        if preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"unknown preempt_policy {preempt_policy!r} "
+                             f"(expected one of {PREEMPT_POLICIES})")
+        self.engine = engine
+        self.async_restore = bool(async_restore)
+        self.preempt_policy = preempt_policy
+        self.inflight: Dict[int, _InflightRestore] = {}   # slot -> fetch
+        self.swapped: Dict[int, dict] = {}                # rid -> payload
+        self.stats = {"preemptions": 0, "swap_out_bytes": 0,
+                      "swap_in_bytes": 0, "restore_inflight_ns": 0.0,
+                      "restore_exposed_ns": 0.0, "inflight_peak": 0,
+                      "activations": 0, "blocked_ticks": 0}
+
+    # ------------------------------------------------------------- tick
+    def busy(self) -> bool:
+        """True while any slot's async fetch is still outstanding."""
+        return bool(self.inflight)
+
+    def begin_tick(self) -> None:
+        """One scheduling pass: activate landed fetches, preempt under
+        pressure, then admit queued work into free slots."""
+        self._activate_completed()
+        self._maybe_preempt()
+        self._admit()
+
+    def note_blocked_tick(self, dt_ns: float) -> None:
+        """Account one tick where the whole batch idled on in-flight
+        restores (no RUNNING slot): that tick's simulated time is exposed
+        stall, not hidden latency."""
+        self.stats["blocked_ticks"] += 1
+        self.stats["restore_exposed_ns"] += dt_ns
+        self.engine.stats["restore_stall_ns"] += dt_ns
+
+    # ------------------------------------------------------- transitions
+    def _activate_completed(self) -> None:
+        eng = self.engine
+        for slot in sorted(self.inflight):
+            rec = self.inflight[slot]
+            if not eng.tier.poll(rec.handle):
+                continue
+            del self.inflight[slot]
+            if rec.mode == "swap":
+                eng.slots[slot] = rec.req
+                eng._apply_swap_in(rec.req, slot, rec.entry)
+            else:
+                eng.slots[slot] = rec.req
+                eng._apply_restore(rec.req, slot, rec.entry)
+            rec.req.state = RUNNING
+            self.stats["activations"] += 1
+
+    def _pop_next(self):
+        """Highest-priority queued request, FIFO-stable on ties (so the
+        default all-zero-priority queue is exactly the old FIFO)."""
+        q = self.engine.queue
+        best = 0
+        for j in range(1, len(q)):
+            if q[j].priority > q[best].priority:
+                best = j
+        return q.pop(best)
+
+    def _admit(self) -> None:
+        eng = self.engine
+        for slot in range(eng.n_slots):
+            if eng.slots[slot] is not None or slot in self.inflight \
+                    or not eng.queue:
+                continue
+            req = self._pop_next()
+            req.slot = slot
+            t0 = time.perf_counter()
+            self._place(req, slot)
+            eng.stats["prefill_time_s"] += time.perf_counter() - t0
+
+    def _place(self, req, slot: int) -> None:
+        """Route one admitted request: swap-in, prefix restore or prefill."""
+        eng = self.engine
+        if req.rid in self.swapped:
+            self._swap_in(req, slot, self.swapped.pop(req.rid))
+            return
+        eng.slots[slot] = req
+        if not eng.legacy and self._try_restore(req, slot):
+            eng.stats["prefix_hits"] += 1
+        elif eng.legacy:
+            eng._prefill_slot_legacy(req, slot)
+            req.state = RUNNING
+        else:
+            eng._prefill_slot(req, slot)
+            req.state = RUNNING
+
+    def _note_inflight_peak(self) -> None:
+        if self.engine.tier is not None:
+            depth = self.engine.tier.inflight_ops()
+            if depth > self.stats["inflight_peak"]:
+                self.stats["inflight_peak"] = depth
+
+    def _try_restore(self, req, slot: int) -> bool:
+        """Prefix restore — blocking charge, or async issue + RESTORING.
+
+        Staging-index hits stay free and instant in both modes (the
+        deterministic store keeps those pages in reserved GPU memory);
+        only a cold-tier hit goes through the simulated fetch.
+        """
+        eng = self.engine
+        res = eng._restore_lookup(req)
+        if res is None:
+            return False
+        entry, key, source = res
+        if eng.tier is not None and source == "store":
+            nbytes = CxlTier.entry_bytes(entry)
+            if self.async_restore:
+                handle = eng.tier.read_entry_async(key, nbytes)
+                req.restore_stall_ns = handle.issue_wait_ns
+                eng.stats["restore_stall_ns"] += handle.issue_wait_ns
+                self.stats["restore_exposed_ns"] += handle.issue_wait_ns
+                self.stats["restore_inflight_ns"] += handle.in_flight_ns
+                eng.slots[slot] = None          # reserved, not active
+                self.inflight[slot] = _InflightRestore(
+                    req, slot, entry, handle, "restore")
+                req.state = RESTORING
+                self._note_inflight_peak()
+                return True
+            stall = eng.tier.read_entry(key, nbytes)
+            req.restore_stall_ns = stall
+            eng.stats["restore_stall_ns"] += stall
+        eng._apply_restore(req, slot, entry)
+        req.state = RUNNING
+        return True
+
+    # -------------------------------------------------------- preemption
+    def _maybe_preempt(self) -> None:
+        """Swap out the lowest-priority running slot when queued work of
+        strictly higher priority has no free capacity to land on."""
+        eng = self.engine
+        if self.preempt_policy == "none" or not eng.queue:
+            return
+        if self.preempt_policy == "swap" and not eng._restorable:
+            return            # no paged KV to swap for this family
+        if any(eng.slots[s] is None and s not in self.inflight
+               for s in range(eng.n_slots)):
+            return            # free capacity: no pressure
+        running = [(eng.slots[s].priority, s) for s in range(eng.n_slots)
+                   if eng.slots[s] is not None]
+        if not running:
+            return
+        best_queued = max(r.priority for r in eng.queue)
+        vprio, vslot = min(running)
+        if best_queued <= vprio:
+            return
+        self._swap_out(vslot)
+
+    def _swap_out(self, slot: int) -> None:
+        eng = self.engine
+        req = eng.slots[slot]
+        eng._materialize_tokens(req, slot)
+        if self.preempt_policy == "swap":
+            entry = eng._capture_swap_entry(req, slot)
+            nbytes = CxlTier.entry_bytes(entry)
+            if eng.tier is not None:
+                if self.async_restore:
+                    h = eng.tier.write_entry_async(("swap", req.rid), nbytes)
+                    eng.stats["tier_write_ns"] += h.issue_wait_ns
+                    self._note_inflight_peak()
+                else:
+                    eng.stats["tier_write_ns"] += eng.tier.write_entry(
+                        ("swap", req.rid), nbytes)
+            self.stats["swap_out_bytes"] += nbytes
+            self.swapped[req.rid] = entry
+            req.state = SWAPPED
+        else:                 # recompute: keep only the token stream
+            self.swapped[req.rid] = {"recompute": True}
+            req.state = PREEMPTED
+        eng.slots[slot] = None
+        req.slot = None
+        eng.queue.append(req)
+        self.stats["preemptions"] += 1
+
+    def _swap_in(self, req, slot: int, entry: dict) -> None:
+        eng = self.engine
+        if entry.get("recompute"):
+            eng.slots[slot] = req
+            eng._recompute_resume(req, slot)
+            req.state = RUNNING
+            return
+        nbytes = CxlTier.entry_bytes(entry)
+        self.stats["swap_in_bytes"] += nbytes
+        if eng.tier is not None:
+            if self.async_restore:
+                handle = eng.tier.read_entry_async(("swap", req.rid), nbytes)
+                req.restore_stall_ns += handle.issue_wait_ns
+                eng.stats["restore_stall_ns"] += handle.issue_wait_ns
+                self.stats["restore_exposed_ns"] += handle.issue_wait_ns
+                self.stats["restore_inflight_ns"] += handle.in_flight_ns
+                self.inflight[slot] = _InflightRestore(
+                    req, slot, entry, handle, "swap")
+                req.state = RESTORING
+                self._note_inflight_peak()
+                return
+            stall = eng.tier.read_entry(("swap", req.rid), nbytes)
+            req.restore_stall_ns += stall
+            eng.stats["restore_stall_ns"] += stall
+        eng.slots[slot] = req
+        eng._apply_swap_in(req, slot, entry)
+        req.state = RUNNING

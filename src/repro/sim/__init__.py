@@ -6,7 +6,7 @@ Table 1b trace generators (``workloads``) and scenario matrices
 (``sweep``). ``engine`` also hosts the page-granular timing surface the
 serving tier charges against (``PageStream`` / ``Topology``).
 """
-from repro.sim.engine import (PageStream, RunResult, Topology,
+from repro.sim.engine import (OpHandle, PageStream, RunResult, Topology,
                               replay_page_trace, run, slowdown_vs_ideal)
 from repro.sim.media import (DRAM, MEDIA, NAND, OPTANE, ZNAND, Endpoint,
                              resolve_media)
@@ -15,6 +15,6 @@ from repro.sim.vector import run as run_vectorized
 from repro.sim import sweep, workloads
 
 __all__ = ["RunResult", "run", "run_vectorized", "slowdown_vs_ideal",
-           "PageStream", "Topology", "replay_page_trace",
+           "OpHandle", "PageStream", "Topology", "replay_page_trace",
            "DRAM", "MEDIA", "NAND", "OPTANE", "ZNAND", "Endpoint",
            "RootPortController", "resolve_media", "sweep", "workloads"]

@@ -258,18 +258,57 @@ def category_mean(results: Dict[str, float], category: str) -> float:
 # pages flush to the expansion tier, a prefix restore pulls them back. The
 # PageStream below is the reusable timing API both sides of that traffic
 # share — one root port + EP (the same silicon model the trace engine
-# drives) serving a *blocking* single request stream: the restore path
-# stalls the slot until its pages arrive, so one outstanding page op is
-# the faithful GPU-side model.
+# drives). Two disciplines coexist on one port clock:
+#
+#  * blocking ops (``read``/``write``) stall the caller until the pages
+#    land — the slot-synchronous model the serving tier started with;
+#  * non-blocking ops (``issue``/``poll``) start the media work on the
+#    port's service cursor and hand back an :class:`OpHandle` carrying the
+#    completion timestamp; the caller's clock only moves when the per-port
+#    in-flight cap forces an issue stall. Completions retire as simulated
+#    time (``advance``) passes the handle's ``done_ns`` — the paper's
+#    latency hiding: media work overlaps the decode ticks in between.
 
 PAGE_ADVANCE = 0      # idle time passing between engine ticks (nbytes = ns)
 PAGE_READ = 1         # demand page read (restore fetch)
 PAGE_WRITE = 2        # page writeback (flush to the cold tier)
 PAGE_PREFETCH = 3     # MemSpecRd stream for an upcoming restore
+PAGE_READ_ASYNC = 4   # non-blocking demand read (charged = issue wait only)
+PAGE_WRITE_ASYNC = 5  # non-blocking writeback (charged = issue wait only)
+
+MAX_INFLIGHT_OPS = 4  # default per-port cap on outstanding async page ops
+
+
+@dataclasses.dataclass
+class OpHandle:
+    """Completion handle for one non-blocking page op on one port.
+
+    All timestamps are simulated ns on the issuing port's clock:
+    ``issued_ns`` is the caller's clock when the op was issued (after any
+    in-flight-cap stall), ``start_ns`` when the port began servicing it,
+    ``done_ns`` its completion, and ``wait_ns`` the issue stall the
+    in-flight cap charged the caller (0.0 when a slot was free). The op
+    is complete once the port clock reaches ``done_ns`` (see
+    :meth:`PageStream.poll`).
+    """
+
+    kind: int
+    addr: int
+    nbytes: int
+    port: int
+    issued_ns: float
+    start_ns: float
+    done_ns: float
+    wait_ns: float
+
+    @property
+    def in_flight_ns(self) -> float:
+        """Simulated ns the op was outstanding (issue -> completion)."""
+        return self.done_ns - self.issued_ns
 
 
 class PageStream:
-    """Blocking single-stream page timing over one root port + EP.
+    """Single-stream page timing over one root port + EP.
 
     ``repro.core.tier.CxlTier`` charges the serving engine's page traffic
     against this API incrementally; :func:`replay_page_trace` replays a
@@ -284,11 +323,20 @@ class PageStream:
     complete at GPU-memory speed and divert to staging under congestion;
     prefetches stream straight to the EP's internal DRAM (the MemSpecRd
     fill), off the critical path, honoring the QoS halt state.
+
+    Blocking ops (``read``/``write``) advance ``now`` to the completion;
+    non-blocking ops (``issue``) advance only the port's service cursor
+    (``busy_until``) and return an :class:`OpHandle` — ``now`` moves just
+    for the in-flight-cap stall, so media work overlaps whatever the
+    caller does until it ``poll``\\ s the handle. Both disciplines share
+    one cursor: a blocking op issued behind outstanding async work queues
+    behind it.
     """
 
     def __init__(self, media: str = "znand", *, sr: bool = True,
                  ds: bool = True, req_bytes: int = 256,
-                 dram_cache_bytes: int = 8 << 20):
+                 dram_cache_bytes: int = 8 << 20,
+                 max_inflight: int = MAX_INFLIGHT_OPS):
         self.ep = Endpoint(resolve_media(media),
                            dram_cache_bytes=dram_cache_bytes)
         self.ctl = RootPortController(self.ep,
@@ -296,26 +344,100 @@ class PageStream:
                                       ds_enabled=ds)
         self.req_bytes = int(req_bytes)
         self.now = 0.0
+        self.busy_until = 0.0           # port service cursor (>= now only
+        if int(max_inflight) < 1:       # while async ops are out)
+            raise ValueError("max_inflight must be >= 1 "
+                             f"(got {max_inflight})")
+        self.max_inflight = int(max_inflight)
+        self.inflight: List[OpHandle] = []
         self.prefetch_pages = 0
         self.prefetch_halted = 0
 
+    def _service(self, kind: int, addr: int, nbytes: int,
+                 start: float) -> float:
+        """Walk one page op's CXL.mem requests from ``start``; returns the
+        completion time (ns). ``kind`` is PAGE_READ or PAGE_WRITE."""
+        t = start
+        if kind == PAGE_READ:
+            for a in range(addr, addr + nbytes, self.req_bytes):
+                t = self.ctl.load(t, a)
+        else:
+            for a in range(addr, addr + nbytes, self.req_bytes):
+                t = self.ctl.store(t, a)
+        return t
+
+    def _retire_completed(self) -> None:
+        """Drop handles the stream clock has passed (pure function of
+        ``now`` — polling early never changes subsequent timing)."""
+        if self.inflight:
+            self.inflight = [h for h in self.inflight
+                             if h.done_ns > self.now]
+
     def read(self, addr: int, nbytes: int) -> float:
         """Demand-read a page span; returns the stall (ns) until it lands."""
-        t = self.now
-        for a in range(addr, addr + nbytes, self.req_bytes):
-            t = self.ctl.load(t, a)
+        start = max(self.now, self.busy_until)
+        t = self._service(PAGE_READ, addr, nbytes, start)
         lat = t - self.now
         self.now = t
+        self.busy_until = t
+        self._retire_completed()
         return lat
 
     def write(self, addr: int, nbytes: int) -> float:
         """Write a page span; returns the time (ns) the writer is held."""
-        t = self.now
-        for a in range(addr, addr + nbytes, self.req_bytes):
-            t = self.ctl.store(t, a)
+        start = max(self.now, self.busy_until)
+        t = self._service(PAGE_WRITE, addr, nbytes, start)
         lat = t - self.now
         self.now = t
+        self.busy_until = t
+        self._retire_completed()
         return lat
+
+    def issue(self, kind: int, addr: int, nbytes: int) -> OpHandle:
+        """Issue a page op without blocking on its completion.
+
+        ``kind`` is PAGE_READ_ASYNC / PAGE_WRITE_ASYNC (the blocking
+        kinds are accepted and mapped). The op's requests are scheduled
+        back-to-back on the port's service cursor starting at
+        ``max(now, busy_until)``; the caller's clock advances only when
+        the per-port in-flight cap is exhausted — then the issue stalls
+        until the oldest outstanding op frees a slot, and that stall is
+        the handle's ``wait_ns`` (the only latency charged at issue).
+        """
+        issued = self.now
+        self._retire_completed()
+        wait = 0.0
+        if len(self.inflight) >= self.max_inflight:
+            # stall until enough outstanding ops complete to free a slot
+            free_at = sorted(h.done_ns for h in self.inflight)[
+                len(self.inflight) - self.max_inflight]
+            wait = max(0.0, free_at - self.now)
+            self.now += wait
+            self._retire_completed()
+        start = max(self.now, self.busy_until)
+        base = PAGE_READ if kind in (PAGE_READ, PAGE_READ_ASYNC) \
+            else PAGE_WRITE
+        done = self._service(base, addr, nbytes, start)
+        self.busy_until = done
+        handle = OpHandle(kind=kind, addr=addr, nbytes=nbytes, port=0,
+                          issued_ns=issued, start_ns=start, done_ns=done,
+                          wait_ns=wait)
+        self.inflight.append(handle)
+        return handle
+
+    def poll(self, handle: OpHandle) -> bool:
+        """True once the stream clock has reached the op's completion.
+
+        Pure observation: retiring a completed handle early never changes
+        later timing (the in-flight set is a function of ``now`` alone).
+        """
+        self._retire_completed()
+        return self.now >= handle.done_ns
+
+    def inflight_depth(self) -> int:
+        """Number of async ops still outstanding at the current clock."""
+        self._retire_completed()
+        return len(self.inflight)
 
     def prefetch(self, addr: int, nbytes: int) -> float:
         """Issue the MemSpecRd stream for a span; free on the demand path."""
@@ -335,12 +457,18 @@ class PageStream:
         closed flush window could never reopen (no stores -> no response
         flits -> no telemetry), deadlocking the divert discipline."""
         self.now += dt_ns
+        self._retire_completed()
         self.ctl.qos.update(self.ep.devload(self.now))
         self.ctl.background_flush(self.now)
         return 0.0
 
     def op(self, kind: int, addr: int, nbytes: int) -> float:
-        """Dispatch one recorded page op (the replay entry point)."""
+        """Dispatch one recorded page op (the replay entry point).
+
+        Async kinds replay as fresh issues — the returned latency is the
+        in-flight-cap stall charged at issue, exactly what the online
+        accounting recorded; the op's media work lands on the service
+        cursor as it did live."""
         if kind == PAGE_READ:
             return self.read(addr, nbytes)
         if kind == PAGE_WRITE:
@@ -349,6 +477,8 @@ class PageStream:
             return self.prefetch(addr, nbytes)
         if kind == PAGE_ADVANCE:
             return self.advance(float(nbytes))
+        if kind in (PAGE_READ_ASYNC, PAGE_WRITE_ASYNC):
+            return self.issue(kind, addr, nbytes).wait_ns
         raise ValueError(f"unknown page-op kind {kind}")
 
 
@@ -357,12 +487,16 @@ class Topology:
 
     The paper's headline system design: "multiple CXL root ports for
     integrating diverse storage media (DRAMs and/or SSDs)". Each port is
-    one blocking :class:`PageStream` (root port + EP + QoS state) with its
-    *own* simulated clock (``ports[p].now``, ns), so page ops issued on
-    different ports overlap in simulated time — the async **issue** half.
-    :meth:`sync` is the **drain** half: a barrier that realigns every port
-    clock to the topology-wide maximum, called at engine-tick boundaries
-    (:meth:`advance`) and wherever the caller needs completions settled.
+    one :class:`PageStream` (root port + EP + QoS state) with its *own*
+    simulated clock (``ports[p].now``, ns), so page ops issued on
+    different ports overlap in simulated time — the cross-port **issue**
+    half. :meth:`sync` is the **drain** half: a barrier that realigns
+    every port clock to the topology-wide maximum, called at engine-tick
+    boundaries (:meth:`advance`) and wherever the caller needs blocking
+    completions settled. Non-blocking ops (:meth:`issue`/:meth:`poll`)
+    additionally overlap *within* a port: their media work rides the
+    port's service cursor past the barrier and retires only when
+    simulated time reaches the handle's completion timestamp.
 
     With one port this degenerates exactly to the single blocking
     ``PageStream`` (``sync`` is a no-op), which is what keeps the 1-port
@@ -376,11 +510,13 @@ class Topology:
     """
 
     def __init__(self, medias, *, sr: bool = True, ds: bool = True,
-                 req_bytes: int = 256, dram_cache_bytes: int = 8 << 20):
+                 req_bytes: int = 256, dram_cache_bytes: int = 8 << 20,
+                 max_inflight: int = MAX_INFLIGHT_OPS):
         if not medias:
             raise ValueError("a Topology needs at least one port")
         self.ports = [PageStream(m, sr=sr, ds=ds, req_bytes=req_bytes,
-                                 dram_cache_bytes=dram_cache_bytes)
+                                 dram_cache_bytes=dram_cache_bytes,
+                                 max_inflight=max_inflight)
                       for m in medias]
 
     @property
@@ -413,6 +549,25 @@ class Topology:
             p.advance(dt_ns)
         return 0.0
 
+    def issue(self, port: int, kind: int, addr: int,
+              nbytes: int) -> OpHandle:
+        """Issue a non-blocking op on ``port``; returns its handle with
+        ``handle.port`` stamped so :meth:`poll` can route back."""
+        handle = self.ports[port].issue(kind, addr, nbytes)
+        handle.port = port
+        return handle
+
+    def poll(self, handle: OpHandle) -> bool:
+        """True once the handle's port clock reached its completion."""
+        return self.ports[handle.port].poll(handle)
+
+    def inflight_depth(self, port: Optional[int] = None) -> int:
+        """Outstanding async ops on ``port`` (or topology-wide when
+        ``port`` is None)."""
+        if port is not None:
+            return self.ports[port].inflight_depth()
+        return sum(p.inflight_depth() for p in self.ports)
+
     def op(self, port: int, kind: int, addr: int, nbytes: int) -> float:
         """Dispatch one port-tagged page op; returns its latency (ns).
 
@@ -427,6 +582,7 @@ class Topology:
 def replay_page_trace(ops, *, media: str = "znand", sr: bool = True,
                       ds: bool = True, req_bytes: int = 256,
                       dram_cache_bytes: int = 8 << 20,
+                      max_inflight: int = MAX_INFLIGHT_OPS,
                       topology=None) -> np.ndarray:
     """Scalar-oracle replay of a recorded page trace.
 
@@ -436,13 +592,18 @@ def replay_page_trace(ops, *, media: str = "znand", sr: bool = True,
     of per-port media specs) is given. Returns the per-op latencies (ns)
     of a fresh :class:`PageStream` / :class:`Topology` walking the same
     trace — the cross-validation oracle for the tier's incremental
-    accounting.
+    accounting. Async op kinds replay too: the interleaved PAGE_ADVANCE
+    records carry the simulated time that let them complete, so a replay
+    reproduces issue stalls (``max_inflight`` must match the recording
+    tier's cap) and service-cursor queueing exactly.
     """
     if topology is not None:
         topo = Topology(topology, sr=sr, ds=ds, req_bytes=req_bytes,
-                        dram_cache_bytes=dram_cache_bytes)
+                        dram_cache_bytes=dram_cache_bytes,
+                        max_inflight=max_inflight)
         return np.asarray([topo.op(p, k, a, n) for p, k, a, n in ops],
                           np.float64)
     stream = PageStream(media, sr=sr, ds=ds, req_bytes=req_bytes,
-                        dram_cache_bytes=dram_cache_bytes)
+                        dram_cache_bytes=dram_cache_bytes,
+                        max_inflight=max_inflight)
     return np.asarray([stream.op(k, a, n) for k, a, n in ops], np.float64)

@@ -1132,6 +1132,12 @@ def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
             raise ValueError(f"{media.name}: closed form needs a "
                              "DRAM-class EP")
     kinds = np.asarray([k for k, _, _ in rest], np.int64)
+    if np.any((kinds == se.PAGE_READ_ASYNC) | (kinds == se.PAGE_WRITE_ASYNC)):
+        # async issue stalls depend on the in-flight set at issue time —
+        # event-loop state the per-op algebra cannot reconstruct
+        raise ValueError("closed form covers blocking page traces only; "
+                         "async op kinds need the event-loop oracle "
+                         "(replay_page_trace)")
     nbytes = np.asarray([n for _, _, n in rest], np.int64)
     n_reqs = -(-nbytes // req_bytes)
     line = 64                      # CXL.mem request granularity (MemRd)

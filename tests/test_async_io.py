@@ -1,0 +1,201 @@
+"""Completion-based async tier I/O: op handles, caps, oracle replay.
+
+Pins the non-blocking half of the page-timing API: ``issue()`` never
+moves the caller's clock (except for in-flight-cap stalls, which are the
+only latency charged), ``poll()`` flips exactly when simulated time
+passes the completion timestamp, blocking ops queue behind outstanding
+async work on the shared service cursor, and — the satellite property —
+an async-issued page trace replayed through ``replay_page_trace`` (the
+blocking-oracle machinery extended with async kinds) reproduces the
+online accounting within 1% across random op interleavings, port counts
+and media bins.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tier import CxlTier, TierConfig
+from repro.sim.engine import (MAX_INFLIGHT_OPS, PAGE_READ, PAGE_READ_ASYNC,
+                              PAGE_WRITE_ASYNC, PageStream, Topology,
+                              replay_page_trace)
+from repro.sim import vector
+
+ENTRY = 32 << 10
+
+
+def _tier_replay(tier: CxlTier) -> np.ndarray:
+    return replay_page_trace(
+        tier.ops, media=tier.cfg.media_name,
+        topology=tier.cfg.port_medias if tier.cfg.tagged else None,
+        sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
+        req_bytes=tier.cfg.req_bytes,
+        dram_cache_bytes=tier.cfg.dram_cache_bytes,
+        max_inflight=tier.cfg.max_inflight)
+
+
+# ----------------------------------------------------- PageStream handles
+
+def test_issue_does_not_advance_clock_poll_flips_on_completion():
+    s = PageStream("znand")
+    h = s.issue(PAGE_READ_ASYNC, 0, ENTRY)
+    assert s.now == 0.0                      # caller clock untouched
+    assert h.wait_ns == 0.0
+    assert h.done_ns > 0.0 and h.in_flight_ns == h.done_ns
+    assert not s.poll(h)
+    s.advance(h.done_ns / 2)
+    assert not s.poll(h)
+    s.advance(h.done_ns)                     # clock passes the completion
+    assert s.poll(h)
+    assert s.inflight_depth() == 0
+
+
+def test_issue_matches_blocking_read_when_stream_idle():
+    """On an idle stream the async op's service span is exactly the
+    blocking read's stall (same controller walk, same arithmetic)."""
+    b = PageStream("znand")
+    a = PageStream("znand")
+    stall = b.read(0, ENTRY)
+    h = a.issue(PAGE_READ_ASYNC, 0, ENTRY)
+    assert h.done_ns - h.start_ns == pytest.approx(stall)
+
+
+def test_inflight_cap_charges_issue_wait():
+    s = PageStream("znand", max_inflight=2)
+    h1 = s.issue(PAGE_READ_ASYNC, 0, ENTRY)
+    h2 = s.issue(PAGE_READ_ASYNC, ENTRY, ENTRY)
+    assert h1.wait_ns == h2.wait_ns == 0.0
+    h3 = s.issue(PAGE_READ_ASYNC, 2 * ENTRY, ENTRY)   # cap hit: stalls
+    assert h3.wait_ns > 0.0
+    assert s.now == pytest.approx(h1.done_ns)  # waited for the oldest
+    assert s.inflight_depth() == 2
+
+
+def test_blocking_op_queues_behind_async_backlog():
+    """Shared service cursor: a blocking read issued while a cold async
+    fetch is in flight starts after it, and the stall bills the queueing
+    — the two do not magically parallelize on one port."""
+    solo = PageStream("znand", sr=False)
+    solo_stall = solo.read(4 << 20, ENTRY)
+    s = PageStream("znand", sr=False)
+    h = s.issue(PAGE_READ_ASYNC, 0, ENTRY)    # cold fetch holds the cursor
+    stall = s.read(4 << 20, ENTRY)            # disjoint span: no cache help
+    assert s.now >= h.done_ns                 # read completed after it
+    assert stall > solo_stall                 # queueing actually billed
+
+
+def test_topology_issue_routes_and_overlaps():
+    topo = Topology(["znand", "znand"])
+    h0 = topo.issue(0, PAGE_READ_ASYNC, 0, ENTRY)
+    h1 = topo.issue(1, PAGE_READ_ASYNC, 0, ENTRY)
+    assert h0.port == 0 and h1.port == 1
+    assert topo.inflight_depth() == 2
+    # distinct ports: neither queued behind the other
+    assert h0.start_ns == h1.start_ns == 0.0
+    topo.advance(max(h0.done_ns, h1.done_ns))
+    assert topo.poll(h0) and topo.poll(h1)
+    assert topo.inflight_depth() == 0
+
+
+def test_closed_form_rejects_async_kinds():
+    tier = CxlTier(TierConfig(media="dram"))
+    tier.write_entry_async(0, ENTRY)
+    with pytest.raises(ValueError):
+        vector.page_trace_closed_form(tier.ops, "dram")
+
+
+# --------------------------------------------------------- tier handles
+
+def test_tier_async_entry_ops_retire_via_advance():
+    tier = CxlTier(TierConfig(media="ssd-fast"))
+    wh = tier.write_entry_async("a", ENTRY)
+    rh = tier.read_entry_async("a", ENTRY)
+    assert not tier.poll(rh)
+    assert tier.inflight_ops() == 2
+    for _ in range(200):
+        if tier.poll(wh) and tier.poll(rh):
+            break
+        tier.advance(100_000.0)
+    assert tier.poll(wh) and tier.poll(rh)
+    assert tier.inflight_ops() == 0
+    assert tier.counters["async_reads"] == 1
+    assert tier.counters["async_writes"] == 1
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _tier_replay(tier),
+                               rtol=0.01, atol=1e-6)
+
+
+def test_tier_async_trace_replays_on_multi_port_topology():
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast"),
+                              placement="striped"))
+    handles = []
+    for i in range(6):
+        handles.append(tier.write_entry_async(i, ENTRY))
+        tier.advance(50_000.0)
+    for i in range(6):
+        tier.speculative_read(i, ENTRY)
+        handles.append(tier.read_entry_async(i, ENTRY))
+        tier.advance(50_000.0)
+    for _ in range(300):
+        if all(tier.poll(h) for h in handles):
+            break
+        tier.advance(100_000.0)
+    assert all(h.retired for h in handles)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _tier_replay(tier),
+                               rtol=0.01, atol=1e-6)
+
+
+# ------------------------------------------- satellite: property replay
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3),
+       st.integers(0, 2), st.booleans())
+def test_random_async_interleaving_replays_within_1pct(seed, n_ports,
+                                                       media_i, sr):
+    """Any interleaving of sync/async entry ops, prefetches and advances,
+    on any port count and media bin, must replay within 1% of the scalar
+    oracle — per-op and in aggregate."""
+    rng = np.random.default_rng(seed)
+    bins = ("dram", "ssd-fast", "ssd-slow")
+    medias = tuple(bins[(media_i + j) % 3] for j in range(n_ports))
+    cfg = TierConfig(topology=medias, sr_enabled=sr) if n_ports > 1 \
+        else TierConfig(media=medias[0], sr_enabled=sr)
+    tier = CxlTier(cfg)
+    keys = list(range(6))
+    for _ in range(30):
+        k = keys[int(rng.integers(len(keys)))]
+        nbytes = int(rng.integers(1 << 10, 48 << 10))
+        op = rng.random()
+        if op < 0.25:
+            tier.write_entry(k, nbytes)
+        elif op < 0.45:
+            tier.write_entry_async(k, nbytes)
+        elif op < 0.60:
+            tier.read_entry(k, nbytes)
+        elif op < 0.80:
+            tier.read_entry_async(k, nbytes)
+        elif op < 0.90:
+            tier.speculative_read(k, nbytes)
+        else:
+            tier.advance(float(rng.integers(10_000, 500_000)))
+    oracle = _tier_replay(tier)
+    got = np.asarray(tier.op_ns)
+    np.testing.assert_allclose(got, oracle, rtol=0.01, atol=1e-6)
+    assert got.sum() == pytest.approx(oracle.sum(), rel=0.01, abs=1e-6)
+
+
+def test_replay_with_wrong_cap_diverges_detectably():
+    """The cap is part of the timing contract: replaying a cap-stalled
+    trace with a larger cap must not reproduce the charged waits (guards
+    against the replay silently ignoring max_inflight)."""
+    tier = CxlTier(TierConfig(media="ssd-slow", max_inflight=1))
+    tier.read_entry_async(0, ENTRY)
+    tier.read_entry_async(1, ENTRY)          # cap 1: charged a real wait
+    assert any(ns > 0 for ns in tier.op_ns)
+    loose = replay_page_trace(tier.ops, media=tier.cfg.media_name,
+                              sr=True, ds=True,
+                              req_bytes=tier.cfg.req_bytes,
+                              dram_cache_bytes=tier.cfg.dram_cache_bytes,
+                              max_inflight=MAX_INFLIGHT_OPS)
+    assert not np.allclose(np.asarray(tier.op_ns), loose, rtol=0.01)
+    strict = _tier_replay(tier)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), strict, rtol=0.01)

@@ -1,0 +1,219 @@
+"""Request-lifecycle scheduler: state machine, async restore overlap,
+preemption fidelity and the blocking-path bit-identity gate.
+
+The acceptance contracts from the issue: with ``cxl_async`` off the
+engine is bit-identical to the blocking path (same tokens, same tier
+trace, no async op kinds); with it on, aggregate restore stall is
+strictly lower on identical traffic while the token streams stay
+greedy-identical; a preempted-and-resumed request generates exactly the
+tokens of an uninterrupted run under both swap and recompute policies;
+and under pressure preempt+swap completes strictly more requests per
+simulated second than FIFO.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.core.tier import CxlTier, TierConfig
+from repro.models import model as M
+from repro.serving import scheduler as sched
+from repro.serving.engine import Request, ServingEngine
+from repro.sim.engine import (PAGE_READ, PAGE_READ_ASYNC, PAGE_WRITE_ASYNC,
+                              replay_page_trace)
+
+PROMPTS = [[i + 1, 2, 3, 4, 5] for i in range(4)]
+
+
+def _make(arch="qwen3-1.7b", **kw):
+    cfg = registry.smoke(arch)
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(params, cfg, rc, **kw)
+
+
+def _serve_settle_resubmit(eng, max_new=4, resubmit_new=3):
+    """Serve PROMPTS, settle staging into the cold tier, resubmit."""
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    eng.run(max_ticks=300)
+    for _ in range(300):
+        if not eng.flusher.pending:
+            break
+        eng.tier.advance(eng.tier_step_ns)
+        eng.flusher.maybe_flush()
+    assert not eng.flusher.pending
+    for i, p in enumerate(PROMPTS):
+        eng.submit(Request(rid=100 + i, prompt=p,
+                           max_new_tokens=resubmit_new))
+    eng.run(max_ticks=300)
+    return eng
+
+
+def _replay(tier):
+    return replay_page_trace(
+        tier.ops, media=tier.cfg.media_name,
+        topology=tier.cfg.port_medias if tier.cfg.tagged else None,
+        sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
+        req_bytes=tier.cfg.req_bytes,
+        dram_cache_bytes=tier.cfg.dram_cache_bytes,
+        max_inflight=tier.cfg.max_inflight)
+
+
+# ------------------------------------------------ blocking bit-identity
+
+def test_async_off_is_bit_identical_blocking_path(mesh_ctx):
+    """The acceptance gate: with cxl_async off the refactored engine
+    reproduces the blocking path exactly — every tier op is a blocking
+    kind, the restore stall equals the sum of charged demand reads, and
+    the trace replays; async mode on identical traffic emits async reads
+    and strictly less aggregate stall, with identical greedy tokens."""
+    outs, stalls, tiers = {}, {}, {}
+    for mode in (False, True):
+        tier = CxlTier(TierConfig(media="ssd-fast"))
+        eng = _make(n_slots=2, max_seq=32, prefill_chunk=4, cxl_tier=tier,
+                    cxl_async=mode)
+        _serve_settle_resubmit(eng)
+        assert eng.stats["prefix_hits"] == len(PROMPTS)
+        outs[mode] = {r.rid: r.generated for r in eng.finished}
+        stalls[mode] = eng.stats["restore_stall_ns"]
+        tiers[mode] = tier
+    kinds_off = {op[0] for op in tiers[False].ops}
+    assert PAGE_READ_ASYNC not in kinds_off
+    assert PAGE_WRITE_ASYNC not in kinds_off
+    assert stalls[False] == pytest.approx(
+        tiers[False].counters["read_ns"])      # blocking = charged reads
+    kinds_on = {op[0] for op in tiers[True].ops}
+    assert PAGE_READ_ASYNC in kinds_on and PAGE_WRITE_ASYNC in kinds_on
+    assert PAGE_READ not in kinds_on           # every restore went async
+    assert stalls[True] < stalls[False]        # the tentpole gate
+    assert outs[False] == outs[True]           # greedy tokens unchanged
+    for tier in tiers.values():
+        np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                                   rtol=0.01, atol=1e-6)
+
+
+# ----------------------------------------------------- async lifecycle
+
+def test_async_restore_overlaps_decode_and_states_walk(mesh_ctx):
+    """A slot whose restore is in flight must not stall the batch: with
+    one slot decoding fresh work and one restoring, decode ticks keep
+    landing while the fetch flies, and the restored request walks
+    QUEUED -> RESTORING -> RUNNING -> RETIRED."""
+    tier = CxlTier(TierConfig(media="ssd-slow", sr_enabled=False))
+    eng = _make(n_slots=2, max_seq=32, prefill_chunk=4, cxl_tier=tier,
+                cxl_async=True)
+    for i, p in enumerate(PROMPTS[:2]):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=3))
+    eng.run(max_ticks=300)
+    for _ in range(300):
+        if not eng.flusher.pending:
+            break
+        tier.advance(eng.tier_step_ns)
+        eng.flusher.maybe_flush()
+    assert not eng.flusher.pending
+
+    resub = Request(rid=100, prompt=PROMPTS[0], max_new_tokens=3)
+    fresh = Request(rid=101, prompt=[7, 7, 7, 7], max_new_tokens=12)
+    assert resub.state == sched.QUEUED
+    eng.submit(fresh)
+    eng.submit(resub)
+    eng.step()
+    assert resub.state == sched.RESTORING     # fetch in flight
+    assert fresh.state == sched.RUNNING
+    decoded_during = 0
+    while resub.state == sched.RESTORING:
+        d0 = eng.stats["decode_tokens"]
+        eng.step()
+        decoded_during += eng.stats["decode_tokens"] - d0
+    assert resub.state == sched.RUNNING
+    assert decoded_during > 0                 # the batch kept decoding
+    eng.run(max_ticks=300)
+    assert resub.state == sched.RETIRED and resub.done
+    assert eng.stats["restore_inflight_ns"] > 0
+    assert eng.stats["restore_overlap_ratio"] > 0
+
+
+# -------------------------------------------------------- preemption
+
+@pytest.mark.parametrize("policy", ["swap", "recompute"])
+def test_preempted_request_tokens_identical(mesh_ctx, policy):
+    """A preempted request, swapped out and resumed, must generate
+    exactly the tokens of an uninterrupted solo run (greedy)."""
+    solo = _make(n_slots=1, max_seq=32, prefill_chunk=4)
+    solo.submit(Request(rid=0, prompt=[9, 8, 7, 6, 5], max_new_tokens=8))
+    ref = solo.run(max_ticks=100)[0].generated
+
+    tier = CxlTier(TierConfig(media="ssd-fast"))
+    eng = _make(n_slots=1, max_seq=32, prefill_chunk=4, cxl_tier=tier,
+                cxl_async=True, preempt_policy=policy)
+    victim = Request(rid=0, prompt=[9, 8, 7, 6, 5], max_new_tokens=8,
+                     priority=0)
+    eng.submit(victim)
+    eng.step()
+    eng.step()                                 # victim decoding
+    eng.submit(Request(rid=1, prompt=[1, 2, 3], max_new_tokens=2,
+                       priority=5))
+    eng.step()
+    assert victim.state == (sched.SWAPPED if policy == "swap"
+                            else sched.PREEMPTED)
+    done = eng.run(max_ticks=400)
+    assert eng.stats["preemptions"] >= 1
+    outs = {r.rid: r.generated for r in done}
+    assert outs[0] == ref
+    assert len(outs[1]) == 2
+    if policy == "swap":
+        assert eng.stats["swap_out_bytes"] > 0
+        assert eng.stats["swap_in_bytes"] == eng.stats["swap_out_bytes"]
+        np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                                   rtol=0.01, atol=1e-6)
+    else:
+        assert eng.stats["swap_out_bytes"] == 0
+
+
+def test_equal_priority_never_preempts(mesh_ctx):
+    """Preemption needs strictly higher queued priority — an all-equal
+    workload degenerates to plain continuous batching (no thrash)."""
+    eng = _make(n_slots=1, max_seq=32, prefill_chunk=4,
+                preempt_policy="swap")
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[rid + 1, 2, 3],
+                           max_new_tokens=3))
+    eng.run(max_ticks=100)
+    assert eng.stats["preemptions"] == 0
+    assert len(eng.finished) == 3
+
+
+def test_pressure_preempt_swap_beats_fifo_throughput(mesh_ctx):
+    """The bench gate, engine-level: under slot pressure preempt+swap
+    completes strictly more requests per simulated second than FIFO on
+    identical traffic and an identical tick horizon."""
+    done = {}
+    for policy in ("none", "swap"):
+        tier = CxlTier(TierConfig(media="ssd-fast"))
+        eng = _make(n_slots=2, max_seq=32, prefill_chunk=4, cxl_tier=tier,
+                    cxl_async=True, preempt_policy=policy)
+        for i in range(2):
+            eng.submit(Request(rid=i, prompt=[i + 1, 2, 3], priority=0,
+                               max_new_tokens=24))
+        eng.step()
+        eng.step()
+        for i in range(4):
+            eng.submit(Request(rid=100 + i, prompt=[9, 8, i + 1],
+                               priority=1, max_new_tokens=2))
+        eng.run(max_ticks=12)
+        done[policy] = (len(eng.finished), eng.stats["sim_time_ns"])
+    n_fifo, t_fifo = done["none"]
+    n_swap, t_swap = done["swap"]
+    assert n_swap / t_swap > n_fifo / t_fifo
+    assert n_swap > n_fifo
+
+
+def test_legacy_path_rejects_scheduler_features(mesh_ctx):
+    with pytest.raises(ValueError):
+        _make(n_slots=1, legacy_host_path=True, cxl_async=True)
+    with pytest.raises(ValueError):
+        _make(n_slots=1, legacy_host_path=True, preempt_policy="swap")
+    with pytest.raises(ValueError):
+        _make(n_slots=1, preempt_policy="bogus")

@@ -113,6 +113,39 @@ def test_store_restage_evict_keeps_alias_index_bounded(mesh_ctx):
     assert eng.store.bytes <= 60_000
 
 
+def test_submit_probe_refreshes_store_recency(mesh_ctx):
+    """Regression: the enqueue-time SR probe read ``store.pages`` without
+    touching recency, so a hot prefix — one a queued request was about to
+    restore — could be evicted behind entries nobody was waiting for,
+    wasting the MemSpecRd and forcing a full re-prefill. A confirmed
+    probe must refresh LRU order so the prefix survives until admission.
+    """
+    from repro.core.tier import CxlTier, TierConfig
+
+    # a tier makes submit() issue the enqueue-time SR probe; budget sized
+    # to exactly the working set so any insertion evicts the LRU entry
+    eng = _make(n_slots=1, max_seq=32,
+                cxl_tier=CxlTier(TierConfig(media="dram")))
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=[rid + 1, 2, 3],
+                           max_new_tokens=2))
+    eng.run(max_ticks=200)
+    assert set(eng.store.pages) == {0, 1, 2}
+    per_entry = eng.store.bytes // 3
+    eng.store.budget_bytes = 3 * per_entry
+
+    # rid 0 is the LRU entry; a queued resubmit probes (and now touches)
+    # it at submit time...
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=2))
+    assert next(iter(eng.store.pages)) != 0    # probe refreshed recency
+    # ...so a competing retirement evicts a genuinely cold entry instead
+    eng.submit(Request(rid=7, prompt=[7, 7, 7], max_new_tokens=2))
+    eng.run(max_ticks=200)
+    assert 0 in eng.store.pages                # the hot prefix survived
+    restored = [r for r in eng.finished if r.rid == 0 and r.restored]
+    assert restored, "resubmit was not served via restore"
+
+
 def test_host_page_store_lru_eviction_and_bytes():
     kv = {"k": np.zeros((4, 64), np.float32)}   # 1 KiB per entry
     store = HostPageStore(budget_bytes=3 * kv["k"].nbytes)
