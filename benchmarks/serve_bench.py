@@ -34,6 +34,7 @@ has a serving datapoint. Run:
 from __future__ import annotations
 
 import argparse
+import importlib.util
 import json
 import os
 import sys
@@ -44,15 +45,42 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 
 import numpy as np
 
+
+def _load_by_path(modname: str, relpath: str):
+    """Load one repo module standalone, by file path.
+
+    ``repro.serving.stats`` / ``repro.serving.loadgen`` keep their
+    module-level imports stdlib+numpy-only precisely so this works in
+    the jax-free docs CI job: loading them by path skips the ``repro``
+    package ``__init__`` (which pulls jax), letting SCHEMA_KEYS below
+    derive from the dataclass field lists — the single source of truth.
+    """
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    spec = importlib.util.spec_from_file_location(
+        modname, os.path.join(root, relpath))
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[modname] = mod      # dataclasses resolves cls.__module__
+    spec.loader.exec_module(mod)
+    return mod
+
+
+_STATS = _load_by_path("_serving_stats", "src/repro/serving/stats.py")
+_LOADGEN = _load_by_path("_serving_loadgen", "src/repro/serving/loadgen.py")
+
 # Canonical BENCH_serve.json schema, section by section. This is the
 # single source of truth three consumers pin against:
 #  * main() fails if the emitted JSON drifts from it (check_schema),
 #  * tools/check_docs.py fails if the schema table in
 #    docs/ARCHITECTURE.md drifts from it (the CI docs job),
 #  * downstream artifact readers can import it.
+# The engine_stats / load_config / load_scenario sections are *derived*
+# from the owning dataclasses' field lists (repro.serving.stats /
+# repro.serving.loadgen), so the engine's telemetry, the bench artifact
+# and the docs tables cannot drift independently.
 SCHEMA_KEYS = {
     "top": ("bench", "arch", "config", "legacy_host_path",
-            "device_resident", "speedup", "acceptance", "cxl_tier"),
+            "device_resident", "speedup", "acceptance", "cxl_tier",
+            "load"),
     "engine": ("prefill_tok_s", "decode_tok_s", "prefill_tok_s_best",
                "decode_tok_s_best", "prefill_tokens_per_run",
                "decode_tokens_per_run", "prefill_dispatches_per_run",
@@ -75,6 +103,12 @@ SCHEMA_KEYS = {
                        "overlap_ratio", "preemptions", "swap_out_bytes",
                        "swap_in_bytes", "inflight_peak", "prefix_hits",
                        "replay_within_1pct"),
+    "engine_stats": _STATS.EngineStats.field_names(),
+    "load": ("config", "batching", "scheduling", "acceptance"),
+    "load_config": _LOADGEN.LoadConfig.field_names()
+    + ("n_slots", "max_seq", "max_ticks"),
+    "load_scenario": _STATS.LoadMetrics.field_names()
+    + ("engine", "replay_within_1pct"),
 }
 
 
@@ -97,6 +131,8 @@ def check_schema(out) -> list:
     top = set(SCHEMA_KEYS["top"])
     if "cxl_tier" not in out:
         top.discard("cxl_tier")
+    if "load" not in out:
+        top.discard("load")
     diff("top-level", out, top)
     if "legacy_host_path" in out:
         diff("legacy_host_path", out["legacy_host_path"],
@@ -122,6 +158,17 @@ def check_schema(out) -> list:
             for mode, scen in sched.get(axis, {}).items():
                 diff(f"scheduler[{axis}][{mode}]", scen,
                      SCHEMA_KEYS["sched_scenario"])
+    load = out.get("load")
+    if load is not None:
+        diff("load", load, SCHEMA_KEYS["load"])
+        diff("load.config", load.get("config", {}),
+             SCHEMA_KEYS["load_config"])
+        for axis in ("batching", "scheduling"):
+            for mode, scen in load.get(axis, {}).items():
+                diff(f"load[{axis}][{mode}]", scen,
+                     SCHEMA_KEYS["load_scenario"])
+                diff(f"load[{axis}][{mode}].engine", scen.get("engine", {}),
+                     SCHEMA_KEYS["engine_stats"])
     return errs
 
 
@@ -616,6 +663,98 @@ def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
     }
 
 
+def bench_load(params, cfg, rc, *, prefill_chunk: int, seed: int,
+               smoke: bool):
+    """Open-loop continuous-batching load harness (the ``load`` section).
+
+    A seeded open-loop arrival trace (bursty inter-arrival at ~1.25x the
+    continuous engine's service capacity, zipf prompt popularity over a
+    shared catalog, mixed prompt/output lengths, a high-priority
+    interactive class) is generated once and played against three
+    engines on the simulated clock:
+
+     * ``batching``   — closed (wave) admission vs continuous
+       admit-on-retire slot recycling, FIFO both;
+     * ``scheduling`` — FIFO (= the continuous run) vs preempt+swap on
+       the same trace.
+
+    Each scenario emits the full ``LoadMetrics`` SLO summary (TTFT/TPOT
+    p50/p99, goodput at the latency targets, queue-depth and restore-
+    stall percentiles) plus the engine's typed stats and the tier-trace
+    replay gate. Acceptance: continuous goodput strictly above closed on
+    the identical trace, every arrival completed, percentiles emitted,
+    preemption engaged, every trace replaying within 1% of the oracle.
+    Returns the section dict (acceptance included).
+    """
+    from repro.core.tier import CxlTier, TierConfig
+    from repro.serving.config import ServeConfig
+    from repro.serving.engine import ServingEngine
+
+    n_slots = 16 if smoke else 256
+    max_seq = 64
+    max_ticks = 4_000 if smoke else 40_000
+    tick_s = 100_000.0 * 1e-9
+    new_choices = (4, 8, 16)
+    # offered rate: ~1.25x the continuous engine's mean service capacity
+    # (slots retire every mean(max_new) ticks), so queues form — the
+    # regime where admission policy and preemption actually matter
+    mean_new = sum(new_choices) / len(new_choices)
+    rate_rps = round(1.25 * n_slots / (mean_new * tick_s))
+    lc = _LOADGEN.LoadConfig(
+        n_arrivals=48 if smoke else 600,
+        rate_rps=float(rate_rps),
+        arrival="bursty",
+        zipf_s=1.2,
+        n_prompts=12 if smoke else 64,
+        prompt_len_choices=(8, 16, 24),
+        max_new_choices=new_choices,
+        vocab=cfg.vocab_size,
+        hi_prio_frac=0.25,
+        seed=seed,
+        slo_ttft_ms=2.0,
+        slo_tpot_ms=0.2)
+    trace = _LOADGEN.make_trace(lc)
+
+    def run_one(admit_mode, policy):
+        tier = CxlTier(TierConfig(media="ssd-fast"))
+        eng = ServingEngine(params, cfg, rc, cxl_tier=tier,
+                            config=ServeConfig(
+                                n_slots=n_slots, max_seq=max_seq,
+                                prefill_chunk=prefill_chunk, seed=seed,
+                                cxl_async=True, admit_mode=admit_mode,
+                                preempt_policy=policy))
+        handles, depths = _LOADGEN.drive_open_loop(eng, trace,
+                                                   max_ticks=max_ticks)
+        res = _LOADGEN.summarize(eng, handles, depths, lc).as_dict()
+        res["engine"] = eng.stats.as_dict()
+        res["replay_within_1pct"] = _replay_ok(tier)
+        return res
+
+    batching = {"closed": run_one("closed", "none"),
+                "continuous": run_one("continuous", "none")}
+    scheduling = {"fifo": batching["continuous"],
+                  "preempt_swap": run_one("continuous", "swap")}
+    scens = (batching["closed"], batching["continuous"],
+             scheduling["preempt_swap"])
+    acceptance = {
+        "load_continuous_goodput_above_closed":
+            batching["continuous"]["goodput_req_s"]
+            > batching["closed"]["goodput_req_s"],
+        "load_all_arrivals_completed": all(
+            s["completed"] == lc.n_arrivals for s in scens),
+        "load_ttft_percentiles_emitted": all(
+            s["ttft_ms_p99"] > 0 and s["tpot_ms_p99"] > 0 for s in scens),
+        "load_preempt_engaged":
+            scheduling["preempt_swap"]["preemptions"] >= 1,
+        "load_replay_within_1pct": all(
+            s["replay_within_1pct"] for s in scens),
+    }
+    config = {k: getattr(lc, k) for k in lc.field_names()}
+    config.update(n_slots=n_slots, max_seq=max_seq, max_ticks=max_ticks)
+    return {"config": config, "batching": batching,
+            "scheduling": scheduling, "acceptance": acceptance}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -643,6 +782,11 @@ def main(argv=None) -> int:
                     help="also sweep the CXL-timed tier (media bins "
                          "dram/ssd-fast/ssd-slow x SR on/off) and emit "
                          "a cxl_tier section")
+    ap.add_argument("--load", action="store_true",
+                    help="also run the open-loop continuous-batching load "
+                         "harness (seeded bursty arrivals at ~1.25x "
+                         "capacity; continuous-vs-closed and FIFO-vs-"
+                         "preempt sweeps) and emit a load section")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -674,6 +818,9 @@ def main(argv=None) -> int:
             prompt_len=prompt_len, max_new=min(max_new, 16),
             prefill_chunk=args.prefill_chunk, seed=args.seed) \
             if args.cxl_tier else None
+        load = bench_load(params, cfg, rc, prefill_chunk=8,
+                          seed=args.seed, smoke=bool(args.smoke)) \
+            if args.load else None
     legacy = pair["legacy_host_path"]
     device = pair["device_resident"]
 
@@ -708,6 +855,8 @@ def main(argv=None) -> int:
     }
     if cxl_tier is not None:
         out["cxl_tier"] = cxl_tier
+    if load is not None:
+        out["load"] = load
     schema_drift = check_schema(out)
     if schema_drift:
         print("FAIL: BENCH_serve.json schema drifted from "
@@ -734,6 +883,18 @@ def main(argv=None) -> int:
             "pressure_req_per_sim_s": {
                 m: s["req_per_sim_s"]
                 for m, s in cxl_tier["scheduler"]["pressure"].items()}}
+    if load is not None:
+        summary["load_acceptance"] = load["acceptance"]
+        summary["load_goodput_req_s"] = {
+            "closed": load["batching"]["closed"]["goodput_req_s"],
+            "continuous": load["batching"]["continuous"]["goodput_req_s"],
+            "preempt_swap":
+                load["scheduling"]["preempt_swap"]["goodput_req_s"]}
+        summary["load_ttft_ms_p99"] = {
+            "closed": load["batching"]["closed"]["ttft_ms_p99"],
+            "continuous": load["batching"]["continuous"]["ttft_ms_p99"],
+            "preempt_swap":
+                load["scheduling"]["preempt_swap"]["ttft_ms_p99"]}
     print(json.dumps(summary, indent=2))
     if not acceptance["prefix_restore_zero_prefill"]:
         print("FAIL: resubmitted rid was not served via prefix restore",
@@ -742,6 +903,10 @@ def main(argv=None) -> int:
     if cxl_tier is not None and not all(cxl_tier["acceptance"].values()):
         print("FAIL: cxl_tier acceptance "
               f"{cxl_tier['acceptance']}", file=sys.stderr)
+        return 1
+    if load is not None and not all(load["acceptance"].values()):
+        print(f"FAIL: load acceptance {load['acceptance']}",
+              file=sys.stderr)
         return 1
     return 0
 

@@ -16,35 +16,43 @@ import jax
 
 from repro.configs import registry
 from repro.configs.base import MeshConfig, RunConfig, SHAPES
-from repro.core.tier import CxlTier, TierConfig
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.serving.config import ServeConfig
 from repro.serving.engine import Request, ServingEngine
 
 
 def main():
     cfg = registry.smoke("gemma-2b")
     rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
-    tier = CxlTier(TierConfig(media="ssd-fast", sr_enabled=True))
+    # one config object carries every engine knob, tier included
+    sc = ServeConfig(n_slots=3, max_seq=64, prefill_chunk=8,
+                     tier_media="ssd-fast")
     with jax.set_mesh(make_host_mesh()):
         params = M.init_model(jax.random.PRNGKey(0), cfg)
-        engine = ServingEngine(params, cfg, rc, n_slots=3, max_seq=64,
-                               prefill_chunk=8, cxl_tier=tier)
-        for rid in range(7):
-            engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
-                                  max_new_tokens=8))
-        finished = engine.run()
+        engine = ServingEngine(params, cfg, rc, config=sc)
+        tier = engine.tier
+        handles = [engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
+                                         max_new_tokens=8))
+                   for rid in range(7)]
+        engine.run()
 
         # prefix reuse: resubmit two of the finished rids — their pages
         # come back from the tiered store instead of re-prefilling
         prefill_before = engine.stats["prefill_dispatches"]
         for rid in (0, 3):
-            engine.submit(Request(rid=rid, prompt=[rid + 1, 5, 9],
-                                  max_new_tokens=4))
+            handles.append(engine.submit(
+                Request(rid=rid, prompt=[rid + 1, 5, 9],
+                        max_new_tokens=4)))
         finished = engine.run()      # returns the cumulative finished list
 
-    for r in finished[:3]:
-        print(f"request {r.rid}: prompt={r.prompt} -> {r.generated}")
+    # submit() returns a RequestHandle: completion, tokens and per-request
+    # SLO timings (simulated-clock TTFT / TPOT) without touching slots
+    for h in handles[:3]:
+        ttft = f"{h.ttft_ns / 1e3:.0f}us" if h.ttft_ns is not None else "-"
+        print(f"request {h.rid}: done={h.done()} -> {h.result()} "
+              f"(TTFT {ttft}, TPOT {h.tpot_ns / 1e3:.1f}us/tok, "
+              f"restore stall {h.restore_stall_ns / 1e3:.0f}us)")
     restored = [r for r in finished if r.restored]
     print(f"{len(finished)} requests served, "
           f"{engine.stats['decode_tokens']} tokens in "

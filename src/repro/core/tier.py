@@ -206,6 +206,12 @@ class CxlTier:
         self._segments: Dict[object, List[Tuple[int, int, int]]] = {}
         self._base = [0] * n             # per-port bump allocators
         self._live_bytes = [0] * n       # bytes currently mapped per port
+        # per-port exact-fit free lists: npages -> LIFO of reusable bases.
+        # Only free_entry feeds these (relocations leak their old ranges,
+        # as the bump allocator always did) — under open-loop load the
+        # page store evicts constantly, and without recycling the bump
+        # cursors run away while live_bytes stays flat.
+        self._free: List[Dict[int, List[int]]] = [dict() for _ in range(n)]
         self._entry_counter = 0          # rotates the striping start port
         # hotness-policy state
         self._heat: Dict[object, int] = {}           # restore counts
@@ -224,7 +230,9 @@ class CxlTier:
                          "issue_wait_ns": 0.0,
                          "deferred_admits": 0,
                          "promotions": 0, "demotions": 0,
-                         "migrate_ns": 0.0}
+                         "migrate_ns": 0.0,
+                         "frees": 0, "freed_bytes": 0,
+                         "reused_segments": 0}
 
     # ------------------------------------------------------------ helpers
     @property
@@ -273,8 +281,17 @@ class CxlTier:
             if not pages[p]:
                 continue
             length = pages[p] * pg
-            segs.append((p, self._base[p], length))
-            self._base[p] += length
+            bucket = self._free[p].get(pages[p])
+            if bucket:
+                # exact-fit recycle of a freed segment: same port, same
+                # page count — the EP sees a stable, bounded address space
+                # instead of an ever-growing bump cursor
+                base = bucket.pop()
+                self.counters["reused_segments"] += 1
+            else:
+                base = self._base[p]
+                self._base[p] += length
+            segs.append((p, base, length))
             self._live_bytes[p] += length
         old = self._segments.get(key)
         if old is not None:
@@ -436,6 +453,31 @@ class CxlTier:
         """Async page ops still outstanding across the topology."""
         return self.topo.inflight_depth()
 
+    def free_entry(self, key) -> int:
+        """Release ``key``'s port segments for reuse; returns freed bytes.
+
+        The address ranges go back to their ports' exact-fit free lists
+        (a later same-shape allocation recycles them — see
+        :meth:`_allocate`), and the hotness state for the key is dropped.
+        Freeing charges nothing: deallocation is metadata, only page
+        *movement* costs simulated time. Unknown keys are a no-op
+        (returns 0) so callers can free unconditionally on eviction.
+        """
+        segs = self._segments.pop(key, None)
+        if segs is None:
+            return 0
+        pg = self.cfg.page_bytes
+        freed = 0
+        for p, base, length in segs:
+            self._live_bytes[p] -= length
+            self._free[p].setdefault(length // pg, []).append(base)
+            freed += length
+        self._heat.pop(key, None)
+        self._fast_resident.pop(key, None)
+        self.counters["frees"] += 1
+        self.counters["freed_bytes"] += freed
+        return freed
+
     def speculative_read(self, key, nbytes: int) -> None:
         """MemSpecRd the entry's port ranges ahead of the demand fetch."""
         if not self.cfg.sr_enabled:
@@ -547,6 +589,8 @@ class CxlTier:
             d = self._port_stat_dicts[i]
             d["now_ns"] = p.now
             d["live_bytes"] = self._live_bytes[i]
+            d["free_bytes"] = self.cfg.page_bytes * sum(
+                npg * len(bases) for npg, bases in self._free[i].items())
             d["ep_reads"] = reads
             d["ep_writes"] = ep.stats["writes"]
             d["ep_prefetches"] = ep.stats["prefetches"]
@@ -582,6 +626,9 @@ class CxlTier:
             "promotions": self.counters["promotions"],
             "demotions": self.counters["demotions"],
             "migrate_ns": self.counters["migrate_ns"],
+            "frees": self.counters["frees"],
+            "freed_bytes": self.counters["freed_bytes"],
+            "segment_reuses": self.counters["reused_segments"],
             "async_reads": self.counters["async_reads"],
             "async_writes": self.counters["async_writes"],
             "issue_wait_ns": self.counters["issue_wait_ns"],

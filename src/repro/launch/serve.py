@@ -3,6 +3,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke \
       --requests 8
 
+Every engine knob on the CLI is derived from
+:class:`~repro.serving.config.ServeConfig` — the CLI defaults *are* the
+dataclass defaults, and the engine is constructed from the assembled
+config object rather than a loose keyword bag.
+
 ``--cxl-media`` attaches the CXL-timed memory tier: page flushes and
 prefix restores are charged against the simulated endpoint and the
 restore stall / SR hit rate are reported alongside throughput.
@@ -12,6 +17,13 @@ a per-port stats line. ``--cxl-async`` switches the tier to
 completion-based async I/O (restores overlap decode instead of stalling
 the batch) and ``--preempt-policy swap|recompute`` enables preemptive
 scheduling under slot pressure; both add a scheduler stats line.
+
+``--load`` switches from the closed submit-then-run loop to the
+open-loop continuous-batching harness: a seeded arrival trace
+(``--rate`` req/s, ``--arrival poisson|bursty``, zipf prompt
+popularity) is played against the engine on the simulated clock and the
+SLO summary (TTFT/TPOT p50/p99, goodput at the latency targets, queue
+depth) is printed instead of wall-clock throughput.
 """
 from __future__ import annotations
 
@@ -22,56 +34,17 @@ import jax
 
 from repro.configs import registry
 from repro.configs.base import MeshConfig, RunConfig, SHAPES
-from repro.core.tier import CxlTier, TierConfig
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import model as M
+from repro.serving.config import ServeConfig
 from repro.serving.engine import Request, ServingEngine
 
+# single source of truth for the CLI defaults below
+_DEF = ServeConfig()
 
-def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
-          n_slots: int = 4, max_seq: int = 128, max_new: int = 12,
-          prompt_len: int = 6, seed: int = 0,
-          cxl_media: str = "", cxl_sr: bool = True,
-          cxl_topology: str = "", cxl_placement: str = "striped",
-          cxl_async: bool = False, preempt_policy: str = "none"):
-    """Serve ``n_requests`` random prompts through the tiered engine.
 
-    ``cxl_media`` attaches a single-port CXL-timed tier; ``cxl_topology``
-    (comma-separated media bins, e.g. ``"dram,ssd-fast"``) attaches a
-    multi-root-port tier instead, with ``cxl_placement`` choosing how
-    entries spread across the ports (striped / hashed / hotness).
-    ``cxl_async`` switches restores and flushes to completion-based
-    async tier I/O (media latency hidden behind decode);
-    ``preempt_policy`` (``swap`` / ``recompute``) lets the scheduler
-    evict low-priority slots under pressure. Returns
-    ``(engine, finished_requests)``.
-    """
-    cfg = registry.smoke(arch) if smoke else registry.get(arch)
-    mesh = make_host_mesh() if smoke else make_production_mesh()
-    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
-    tier = None
-    if cxl_topology:
-        tier = CxlTier(TierConfig(
-            topology=tuple(m.strip() for m in cxl_topology.split(",")),
-            placement=cxl_placement, sr_enabled=cxl_sr))
-    elif cxl_media:
-        tier = CxlTier(TierConfig(media=cxl_media, sr_enabled=cxl_sr))
-    with jax.set_mesh(mesh):
-        params = M.init_model(jax.random.PRNGKey(seed), cfg)
-        engine = ServingEngine(params, cfg, rc, n_slots=n_slots,
-                               max_seq=max_seq, cxl_tier=tier,
-                               cxl_async=cxl_async,
-                               preempt_policy=preempt_policy)
-        import numpy as np
-        rng = np.random.default_rng(seed)
-        for rid in range(n_requests):
-            prompt = rng.integers(1, cfg.vocab_size,
-                                  prompt_len).tolist()
-            engine.submit(Request(rid=rid, prompt=prompt,
-                                  max_new_tokens=max_new))
-        t0 = time.time()
-        finished = engine.run()
-        dt = time.time() - t0
+def _print_closed(engine, finished, n_requests, dt):
+    """Summarize one closed-loop run (wall-clock throughput and tier)."""
     tput = engine.stats["decode_tokens"] / dt if dt > 0 else 0.0
     print(f"[serve] {len(finished)}/{n_requests} requests, "
           f"{engine.stats['decode_tokens']} tokens in {dt:.1f}s "
@@ -82,52 +55,135 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
           f"{len(engine.store.pages)} retired caches "
           f"({engine.store.bytes / 1024:.0f} KiB, "
           f"{engine.store.evictions} evictions)")
-    if tier is not None:
-        snap = tier.snapshot()
-        print(f"[serve] cxl tier ({snap['media']}, "
-              f"SR {'on' if cxl_sr else 'off'}): "
-              f"{snap['writes'] + snap['async_writes']} page flushes "
-              f"({snap['write_ns'] / 1e3:.0f}us held), "
-              f"{snap['reads'] + snap['async_reads']} cold restores "
-              f"stalling "
-              f"{engine.stats['restore_stall_ns'] / 1e3:.0f}us total, "
-              f"SR hit rate {snap['sr_hit_rate']:.2f}, "
-              f"{engine.stats['flushes_deferred']} flush windows deferred "
-              f"by the EP, {snap['gc_events']} internal tasks")
-        if cxl_async or preempt_policy != "none":
-            st = engine.stats
-            print(f"[serve] scheduler (async {'on' if cxl_async else 'off'}"
-                  f", policy {preempt_policy}): "
-                  f"{st['preemptions']} preemptions, "
-                  f"{st['swap_out_bytes'] / 1024:.0f} KiB swapped out / "
-                  f"{st['swap_in_bytes'] / 1024:.0f} KiB back in, "
-                  f"restore overlap {st['restore_overlap_ratio']:.2f} "
-                  f"({st['restore_inflight_ns'] / 1e3:.0f}us in flight), "
-                  f"peak {st['sched_inflight_peak']} in-flight tier ops, "
-                  f"{st['sim_time_ns'] / 1e6:.2f}ms simulated")
-        if tier.cfg.tagged:
-            print(f"[serve] topology ({snap['placement']} placement, "
-                  f"{snap['promotions']} promotions / "
-                  f"{snap['demotions']} demotions):")
-            for p in snap["ports"]:
-                print(f"[serve]   port {p['port']} ({p['media']}): "
-                      f"{p['ep_reads']} EP reads, {p['ep_writes']} writes, "
-                      f"SR hit rate {p['sr_hit_rate']:.2f}, "
-                      f"{p['live_bytes'] / 1024:.0f} KiB live, "
-                      f"devload {p['devload']}, "
-                      f"staging {p['staging_occupancy']:.2f}, "
-                      f"{p['inflight']} in flight")
+
+
+def _print_load(metrics, depths):
+    """Summarize one open-loop run (SLO percentiles and goodput)."""
+    m = metrics
+    print(f"[serve] open-loop: {m.completed}/{m.arrivals} arrivals "
+          f"completed in {m.sim_time_ms:.2f}ms simulated "
+          f"({m.throughput_req_s:.0f} req/s; "
+          f"{m.completed_in_slo} within SLO "
+          f"ttft<={m.slo_ttft_ms}ms & tpot<={m.slo_tpot_ms}ms "
+          f"-> goodput {m.goodput_req_s:.0f} req/s)")
+    print(f"[serve]   TTFT p50/p99 {m.ttft_ms_p50:.3f}/"
+          f"{m.ttft_ms_p99:.3f}ms, TPOT p50/p99 {m.tpot_ms_p50:.4f}/"
+          f"{m.tpot_ms_p99:.4f}ms, queue depth p50/p99 "
+          f"{m.queue_depth_p50:.0f}/{m.queue_depth_p99:.0f} "
+          f"({len(depths)} samples), restore stall p50/p99 "
+          f"{m.restore_stall_ms_p50:.3f}/{m.restore_stall_ms_p99:.3f}ms, "
+          f"{m.preemptions} preemptions, {m.prefix_hits} prefix hits")
+
+
+def _print_tier(engine, config):
+    """Per-tier and per-port stats lines for an attached CXL tier."""
+    tier = engine.tier
+    snap = tier.snapshot()
+    print(f"[serve] cxl tier ({snap['media']}, "
+          f"SR {'on' if config.tier_sr else 'off'}): "
+          f"{snap['writes'] + snap['async_writes']} page flushes "
+          f"({snap['write_ns'] / 1e3:.0f}us held), "
+          f"{snap['reads'] + snap['async_reads']} cold restores "
+          f"stalling "
+          f"{engine.stats['restore_stall_ns'] / 1e3:.0f}us total, "
+          f"SR hit rate {snap['sr_hit_rate']:.2f}, "
+          f"{engine.stats['flushes_deferred']} flush windows deferred "
+          f"by the EP, {snap['gc_events']} internal tasks, "
+          f"{snap['frees']} segment frees "
+          f"({snap['segment_reuses']} reused)")
+    if config.cxl_async or config.preempt_policy != "none":
+        st = engine.stats
+        print(f"[serve] scheduler (async "
+              f"{'on' if config.cxl_async else 'off'}"
+              f", policy {config.preempt_policy}, "
+              f"admit {config.admit_mode}): "
+              f"{st['preemptions']} preemptions, "
+              f"{st['swap_out_bytes'] / 1024:.0f} KiB swapped out / "
+              f"{st['swap_in_bytes'] / 1024:.0f} KiB back in, "
+              f"restore overlap {st['restore_overlap_ratio']:.2f} "
+              f"({st['restore_inflight_ns'] / 1e3:.0f}us in flight), "
+              f"peak {st['sched_inflight_peak']} in-flight tier ops, "
+              f"{st['sim_time_ns'] / 1e6:.2f}ms simulated")
+    if tier.cfg.tagged:
+        print(f"[serve] topology ({snap['placement']} placement, "
+              f"{snap['promotions']} promotions / "
+              f"{snap['demotions']} demotions):")
+        for p in snap["ports"]:
+            print(f"[serve]   port {p['port']} ({p['media']}): "
+                  f"{p['ep_reads']} EP reads, {p['ep_writes']} writes, "
+                  f"SR hit rate {p['sr_hit_rate']:.2f}, "
+                  f"{p['live_bytes'] / 1024:.0f} KiB live, "
+                  f"devload {p['devload']}, "
+                  f"staging {p['staging_occupancy']:.2f}, "
+                  f"{p['inflight']} in flight")
+
+
+def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
+          max_new: int = 12, prompt_len: int = 6,
+          config: ServeConfig = _DEF, load=None, max_ticks: int = 100_000):
+    """Serve requests through the tiered engine built from ``config``.
+
+    Closed mode (``load is None``): submits ``n_requests`` random
+    prompts up front, runs to completion and reports wall-clock
+    throughput plus per-request handle timings. Open-loop mode: ``load``
+    is a :class:`~repro.serving.loadgen.LoadConfig`; its seeded arrival
+    trace is played on the simulated clock (arrivals admitted as slots
+    retire) and the SLO summary is printed. Every engine knob — slots,
+    tier media/topology, async I/O, preemption, admission mode — comes
+    from ``config``. Returns ``(engine, finished_requests)``.
+    """
+    cfg = registry.smoke(arch) if smoke else registry.get(arch)
+    mesh = make_host_mesh() if smoke else make_production_mesh()
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    with jax.set_mesh(mesh):
+        params = M.init_model(jax.random.PRNGKey(config.seed), cfg)
+        engine = ServingEngine(params, cfg, rc, config=config)
+        if load is not None:
+            from repro.serving.loadgen import (drive_open_loop, make_trace,
+                                               summarize)
+            trace = make_trace(load)
+            handles, depths = drive_open_loop(engine, trace,
+                                              max_ticks=max_ticks)
+            metrics = summarize(engine, handles, depths, load)
+            finished = [h.request for h in handles if h.done()]
+            _print_load(metrics, depths)
+        else:
+            import numpy as np
+            rng = np.random.default_rng(config.seed)
+            handles = []
+            for rid in range(n_requests):
+                prompt = rng.integers(1, cfg.vocab_size,
+                                      prompt_len).tolist()
+                handles.append(engine.submit(
+                    Request(rid=rid, prompt=prompt,
+                            max_new_tokens=max_new)))
+            t0 = time.time()
+            finished = engine.run()
+            dt = time.time() - t0
+            _print_closed(engine, finished, n_requests, dt)
+            ttfts = [h.ttft_ns for h in handles if h.ttft_ns is not None]
+            if ttfts:
+                print(f"[serve]   per-request handles: "
+                      f"{sum(1 for h in handles if h.done())} done, "
+                      f"mean TTFT {sum(ttfts) / len(ttfts) / 1e6:.3f}ms "
+                      f"simulated")
+    if engine.tier is not None:
+        _print_tier(engine, config)
     return engine, finished
 
 
 def main() -> None:
+    """CLI entry point; every engine default comes from ``ServeConfig``."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=_DEF.n_slots)
+    ap.add_argument("--max-seq", type=int, default=_DEF.max_seq)
     ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--cxl-media", default="",
+    ap.add_argument("--prefill-chunk", type=int, default=_DEF.prefill_chunk)
+    ap.add_argument("--seed", type=int, default=_DEF.seed)
+    ap.add_argument("--cxl-media", default=_DEF.tier_media,
                     help="attach the CXL-timed tier: dram / ssd-fast / "
                          "ssd-slow (or any sim media spec, e.g. znand@2)")
     ap.add_argument("--cxl-sr-off", action="store_true",
@@ -136,25 +192,56 @@ def main() -> None:
                     help="multi-root-port tier: comma-separated per-port "
                          "media bins (e.g. 'dram,ssd-fast,ssd-slow'); "
                          "overrides --cxl-media")
-    ap.add_argument("--cxl-placement", default="striped",
+    ap.add_argument("--cxl-placement", default=_DEF.tier_placement,
                     choices=["striped", "hashed", "hotness"],
                     help="entry placement across the topology's ports")
     ap.add_argument("--cxl-async", action="store_true",
                     help="completion-based async tier I/O: restores no "
                          "longer stall the batch (the slot activates when "
                          "the fetch lands) and flushes run in background")
-    ap.add_argument("--preempt-policy", default="none",
+    ap.add_argument("--preempt-policy", default=_DEF.preempt_policy,
                     choices=["none", "swap", "recompute"],
                     help="preempt the lowest-priority slot under queue "
                          "pressure: swap its KV pages to the CXL tier "
                          "(swap) or drop and re-prefill on resume "
                          "(recompute)")
+    ap.add_argument("--admit-mode", default=_DEF.admit_mode,
+                    choices=["continuous", "closed"],
+                    help="continuous = admit-on-retire slot recycling; "
+                         "closed = wave batching (next wave only once "
+                         "every slot drained)")
+    ap.add_argument("--load", action="store_true",
+                    help="open-loop mode: play a seeded arrival trace on "
+                         "the simulated clock instead of submitting all "
+                         "requests up front; prints the SLO summary")
+    ap.add_argument("--rate", type=float, default=8000.0,
+                    help="open-loop offered load, requests per simulated "
+                         "second")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=["poisson", "bursty"],
+                    help="open-loop inter-arrival process")
+    ap.add_argument("--arrivals", type=int, default=64,
+                    help="open-loop trace length (number of requests)")
+    ap.add_argument("--zipf-s", type=float, default=1.1,
+                    help="zipf exponent for prompt popularity (prefix "
+                         "reuse); larger = more skew")
     args = ap.parse_args()
+    config = ServeConfig(
+        n_slots=args.slots, max_seq=args.max_seq,
+        prefill_chunk=args.prefill_chunk, seed=args.seed,
+        cxl_async=args.cxl_async, preempt_policy=args.preempt_policy,
+        admit_mode=args.admit_mode, tier_media=args.cxl_media,
+        tier_topology=tuple(m.strip() for m in
+                            args.cxl_topology.split(",") if m.strip()),
+        tier_placement=args.cxl_placement, tier_sr=not args.cxl_sr_off)
+    load = None
+    if args.load:
+        from repro.serving.loadgen import LoadConfig
+        load = LoadConfig(n_arrivals=args.arrivals, rate_rps=args.rate,
+                          arrival=args.arrival, zipf_s=args.zipf_s,
+                          seed=args.seed)
     serve(args.arch, smoke=args.smoke, n_requests=args.requests,
-          n_slots=args.slots, max_new=args.max_new,
-          cxl_media=args.cxl_media, cxl_sr=not args.cxl_sr_off,
-          cxl_topology=args.cxl_topology, cxl_placement=args.cxl_placement,
-          cxl_async=args.cxl_async, preempt_policy=args.preempt_policy)
+          max_new=args.max_new, config=config, load=load)
 
 
 if __name__ == "__main__":

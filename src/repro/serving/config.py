@@ -1,0 +1,137 @@
+"""Validated serving-engine configuration (the ``ServeConfig`` dataclass).
+
+One frozen dataclass consolidates every ``ServingEngine`` constructor
+knob — slot count, hot-path options, scheduler policy and the CXL-tier
+attachment — so the engine, ``repro.launch.serve``'s CLI and the
+``benchmarks/serve_bench.py`` scenarios all derive from the same
+defaults instead of each duplicating them. Cross-field constraints
+(the frozen legacy baseline vs scheduler features, closed-batch
+admission vs preemption, policy spellings) are validated once, at
+construction, with the same errors the engine used to raise piecemeal.
+
+The module imports nothing heavier than the stdlib at import time; the
+tier attachment (:meth:`ServeConfig.make_tier`) imports
+``repro.core.tier`` lazily so building and validating a config never
+touches jax.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# mirrored from repro.serving.scheduler / repro.core.tier so validating
+# a config stays import-light; the owning modules re-validate on use.
+_PREEMPT_POLICIES = ("none", "swap", "recompute")
+_ADMIT_MODES = ("continuous", "closed")
+_PLACEMENTS = ("striped", "hashed", "hotness")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Everything a ``ServingEngine`` needs beyond params/config/mesh.
+
+    Engine shape and hot path:
+
+     * ``n_slots`` — concurrent decode slots (the continuous batch).
+     * ``max_seq`` — per-slot page capacity in tokens.
+     * ``temperature`` / ``seed`` — on-device sampling (0 = greedy).
+     * ``prefill_chunk`` — tokens per jitted prefill dispatch.
+     * ``store_budget_bytes`` — HostPageStore LRU budget (None = ∞).
+     * ``legacy_host_path`` — the frozen pre-rewrite baseline engine.
+     * ``sync_prefill`` — block after prefill (benchmark accounting).
+
+    Scheduler (``repro.serving.scheduler``):
+
+     * ``cxl_async`` — completion-based async tier I/O (restores overlap
+       decode; flushes become background ops).
+     * ``preempt_policy`` — ``none`` / ``swap`` / ``recompute``.
+     * ``admit_mode`` — ``continuous`` (admit-on-retire slot recycling,
+       the default) or ``closed`` (wave batching: a new wave is admitted
+       only once every slot drained — the baseline the open-loop load
+       gates compare against).
+
+    CXL tier attachment (declarative; :meth:`make_tier` builds it):
+
+     * ``tier_media`` — single-port media bin ("" = no tier attached).
+     * ``tier_topology`` — per-port media bins; non-empty overrides
+       ``tier_media`` with a multi-root-port tier.
+     * ``tier_placement`` / ``tier_sr`` — placement policy and the
+       speculative-read engine.
+     * ``tier_step_ns`` — simulated ns per engine tick.
+    """
+
+    n_slots: int = 4
+    max_seq: int = 512
+    temperature: float = 0.0
+    seed: int = 0
+    prefill_chunk: int = 32
+    store_budget_bytes: Optional[int] = 256 << 20
+    legacy_host_path: bool = False
+    sync_prefill: bool = False
+    cxl_async: bool = False
+    preempt_policy: str = "none"
+    admit_mode: str = "continuous"
+    tier_media: str = ""
+    tier_topology: Tuple[str, ...] = ()
+    tier_placement: str = "striped"
+    tier_sr: bool = True
+    tier_step_ns: float = 100_000.0
+
+    def __post_init__(self):
+        """Validate spellings and cross-field constraints once."""
+        if self.n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1 (got {self.n_slots})")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 "
+                             f"(got {self.prefill_chunk})")
+        if self.preempt_policy not in _PREEMPT_POLICIES:
+            raise ValueError(f"unknown preempt_policy "
+                             f"{self.preempt_policy!r} (expected one of "
+                             f"{_PREEMPT_POLICIES})")
+        if self.admit_mode not in _ADMIT_MODES:
+            raise ValueError(f"unknown admit_mode {self.admit_mode!r} "
+                             f"(expected one of {_ADMIT_MODES})")
+        if self.tier_placement not in _PLACEMENTS:
+            raise ValueError(f"unknown tier_placement "
+                             f"{self.tier_placement!r} (expected one of "
+                             f"{_PLACEMENTS})")
+        if self.legacy_host_path and (self.cxl_async
+                                      or self.preempt_policy != "none"):
+            raise ValueError("the legacy host path is the frozen baseline: "
+                             "cxl_async / preempt_policy need the "
+                             "device-resident engine")
+        if self.admit_mode == "closed" and self.preempt_policy != "none":
+            raise ValueError("closed-batch admission cannot preempt: a "
+                             "wave has no queue pressure to preempt for "
+                             "(use admit_mode='continuous')")
+        if self.tier_step_ns <= 0:
+            raise ValueError("tier_step_ns must be positive "
+                             f"(got {self.tier_step_ns})")
+
+    @classmethod
+    def field_names(cls) -> Tuple[str, ...]:
+        """Declared field names in declaration order (CLI derivation)."""
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+    @property
+    def has_tier(self) -> bool:
+        """True when this config declares a CXL tier attachment."""
+        return bool(self.tier_topology or self.tier_media)
+
+    def make_tier(self):
+        """Build the declared ``CxlTier`` (or None without one).
+
+        Lazy-imports ``repro.core.tier`` so config construction and
+        validation stay jax-free; callers that inject a prebuilt tier
+        (tests, benches) simply never call this.
+        """
+        if not self.has_tier:
+            return None
+        from repro.core.tier import CxlTier, TierConfig
+
+        if self.tier_topology:
+            return CxlTier(TierConfig(
+                topology=tuple(self.tier_topology),
+                placement=self.tier_placement, sr_enabled=self.tier_sr))
+        return CxlTier(TierConfig(media=self.tier_media,
+                                  sr_enabled=self.tier_sr))

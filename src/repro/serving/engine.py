@@ -74,6 +74,8 @@ from repro.core.tier import CxlTier
 from repro.models import model as M
 from repro.parallel import sharding as shlib
 from repro.serving import scheduler as sched
+from repro.serving.config import ServeConfig
+from repro.serving.stats import EngineStats
 
 
 @dataclasses.dataclass
@@ -100,6 +102,13 @@ class Request:
     restored: bool = False          # served via prefix restore (no prefill)
     restore_stall_ns: float = 0.0   # simulated CXL fetch stall (cold-tier
                                     # restore through the CxlTier, else 0)
+    # SLO timestamps on the engine's simulated clock (``engine.clock_ns``,
+    # tier_step_ns per working tick plus open-loop idle jumps): stamped at
+    # submit / first sampled token / retirement, read back through the
+    # RequestHandle's ttft_ns / tpot_ns properties.
+    arrival_ns: Optional[float] = None
+    first_token_ns: Optional[float] = None
+    finish_ns: Optional[float] = None
     # device-resident bookkeeping: the sampled-token handle plus this
     # request's tick range in the engine trace; the host only materializes
     # tokens at retirement (one [n_slots] transfer per tick, memoized
@@ -109,6 +118,68 @@ class Request:
     _start_tick: int = 0
     _n_gen: int = 0                 # total generated tokens (stop check)
     _n_dec: int = 0                 # decode ticks participated (trace span)
+
+
+class RequestHandle:
+    """What ``ServingEngine.submit`` returns: one request's progress view.
+
+    Callers poll :meth:`done` / read :meth:`result` instead of fishing
+    retired ``Request`` objects out of ``run()``'s return list (which
+    still returns them, as the deprecation shim for the old shape). The
+    timing properties expose the per-request SLO measurements on the
+    engine's simulated clock — the raw material ``loadgen.summarize``
+    folds into TTFT/TPOT percentiles and goodput.
+    """
+
+    def __init__(self, request: Request, engine: "ServingEngine"):
+        self._req = request
+        self._engine = engine
+
+    @property
+    def rid(self) -> int:
+        """The submitted request's id."""
+        return self._req.rid
+
+    @property
+    def request(self) -> Request:
+        """The underlying ``Request`` (escape hatch for tests/tools)."""
+        return self._req
+
+    def done(self) -> bool:
+        """True once the request retired (its token stream is final)."""
+        return self._req.done
+
+    def result(self) -> List[int]:
+        """The generated token stream; raises while still pending."""
+        if not self._req.done:
+            raise RuntimeError(f"request {self._req.rid} is still "
+                               f"{self._req.state}; call done() first")
+        return list(self._req.generated)
+
+    def tokens(self) -> List[int]:
+        """Tokens materialized so far (empty until retirement on the
+        device-resident path — the stream lives on device mid-flight)."""
+        return list(self._req.generated)
+
+    @property
+    def ttft_ns(self) -> Optional[float]:
+        """Time to first token (simulated ns), None until it exists."""
+        if self._req.first_token_ns is None or self._req.arrival_ns is None:
+            return None
+        return self._req.first_token_ns - self._req.arrival_ns
+
+    @property
+    def tpot_ns(self) -> Optional[float]:
+        """Mean time per output token after the first (simulated ns)."""
+        if self._req.finish_ns is None or self._req.first_token_ns is None:
+            return None
+        span = self._req.finish_ns - self._req.first_token_ns
+        return span / max(len(self._req.generated) - 1, 1)
+
+    @property
+    def restore_stall_ns(self) -> float:
+        """Simulated ns this request stalled on cold-tier fetches."""
+        return self._req.restore_stall_ns
 
 
 # Families whose full per-request decode state lives in the paged "kv"
@@ -131,8 +202,11 @@ class HostPageStore:
     LRU-bounded by ``budget_bytes``: inserts evict the least-recently-used
     entries until the store fits; ``get`` refreshes recency. ``bytes`` and
     ``evictions`` are surfaced through the engine stats. ``on_evict`` is
-    called for every dropped or replaced entry so side indexes (the
-    engine's prompt->rid alias map) stay bounded too. ``put`` reports
+    called as ``on_evict(rid, entry, reason)`` for every dropped
+    (``reason="evict"``) or replaced (``reason="replace"``) entry so side
+    indexes (the engine's prompt->rid alias map) stay bounded too — and so
+    the engine can release a truly evicted entry's CXL-tier segments
+    without freeing the pages a replacement just rewrote. ``put`` reports
     whether the entry survived admission: budget pressure can evict an
     entry during its own insert (a re-staged rid growing past the budget,
     or any oversized entry), and indexing such an entry would leak — the
@@ -162,7 +236,7 @@ class HostPageStore:
             old = self.pages.pop(rid)
             self.bytes -= self._entry_bytes(old)
             if self.on_evict is not None:
-                self.on_evict(rid, old)
+                self.on_evict(rid, old, "replace")
         self.pages[rid] = entry
         self.bytes += self._entry_bytes(entry)
         self._evict()
@@ -183,33 +257,45 @@ class HostPageStore:
             self.bytes -= self._entry_bytes(old)
             self.evictions += 1
             if self.on_evict is not None:
-                self.on_evict(rid, old)
+                self.on_evict(rid, old, "evict")
 
 
 class ServingEngine:
     """Fixed-batch continuous batching with tiered page lifecycle."""
 
     def __init__(self, params, cfg: ModelConfig, rc: RunConfig, *,
-                 n_slots: int = 4, max_seq: int = 512,
-                 temperature: float = 0.0, seed: int = 0,
-                 prefill_chunk: int = 32,
-                 store_budget_bytes: Optional[int] = 256 << 20,
-                 legacy_host_path: bool = False,
-                 sync_prefill: bool = False,
-                 cxl_tier: Optional[CxlTier] = None,
-                 tier_step_ns: float = 100_000.0,
-                 cxl_async: bool = False,
-                 preempt_policy: str = "none"):
+                 config: Optional[ServeConfig] = None,
+                 cxl_tier: Optional[CxlTier] = None, **knobs):
+        """Build the engine from a :class:`ServeConfig`.
+
+        ``config`` carries every knob (slot count, hot-path options,
+        scheduler policy, declarative tier attachment); passing the old
+        keyword knobs directly (``n_slots=...``, ``cxl_async=...``) still
+        works — they construct the ServeConfig, with the same validation.
+        ``cxl_tier`` injects a prebuilt tier (tests/benches that need to
+        inspect the instance); otherwise ``config.make_tier()`` builds
+        whatever the config declares.
+        """
+        if config is not None and knobs:
+            raise TypeError("pass either config=ServeConfig(...) or the "
+                            f"legacy keyword knobs, not both: "
+                            f"{sorted(knobs)}")
+        if config is None:
+            config = ServeConfig(**knobs)
+        self.serve_config = config
         self.params = params
         self.cfg = cfg
         self.rc = rc
-        self.n_slots = n_slots
-        self.max_seq = max_seq
-        self.temperature = temperature
-        self.prefill_chunk = max(1, min(prefill_chunk, max_seq))
-        self.legacy = legacy_host_path
-        self.sync_prefill = sync_prefill
-        self.key = jax.random.PRNGKey(seed)
+        self.n_slots = config.n_slots
+        self.max_seq = config.max_seq
+        self.temperature = config.temperature
+        self.prefill_chunk = max(1, min(config.prefill_chunk,
+                                        config.max_seq))
+        self.legacy = config.legacy_host_path
+        self.sync_prefill = config.sync_prefill
+        self.key = jax.random.PRNGKey(config.seed)
+        n_slots, max_seq = config.n_slots, config.max_seq
+        legacy_host_path = config.legacy_host_path
         self.pspecs = shlib.param_specs(
             jax.eval_shape(lambda: params), tier=rc.param_tier,
             multi_pod_fsdp=rc.mesh.multi_pod)
@@ -233,22 +319,27 @@ class ServingEngine:
         # CXL-timed tier: every page movement below is charged against the
         # simulated endpoint (restore stall, flush cost, SR prefetch), and
         # the EP's announced state gates the flusher's admission window.
-        self.tier = cxl_tier
-        self.tier_step_ns = tier_step_ns
-        self.cxl_async = bool(cxl_async)
+        self.tier = cxl_tier if cxl_tier is not None else config.make_tier()
+        self.tier_step_ns = config.tier_step_ns
+        self.cxl_async = bool(config.cxl_async)
         self._restorable = cfg.family in _RESTORABLE_FAMILIES
-        if legacy_host_path and (cxl_async or preempt_policy != "none"):
-            raise ValueError("the legacy host path is the frozen baseline: "
-                             "cxl_async / preempt_policy need the "
-                             "device-resident engine")
+        # the engine's simulated clock: tier_step_ns per working tick plus
+        # explicit open-loop idle jumps (advance_time). All per-request
+        # SLO timestamps (arrival/first-token/finish) land on it.
+        self.clock_ns = 0.0
+        # outstanding async background writes (flush / swap-out): their
+        # TierHandles are polled each tick and drained at run()'s horizon
+        # so end-of-run in-flight depth is consistent.
+        self._async_writes: List = []
         # request-lifecycle scheduler: admission, async restore
         # activation and preemption decisions live there; with async off
         # and preempt_policy="none" it reproduces the old greedy-FIFO
         # blocking admission exactly.
         self.scheduler = sched.RequestScheduler(
             self, async_restore=self.cxl_async,
-            preempt_policy=preempt_policy)
-        self.store = HostPageStore(budget_bytes=store_budget_bytes,
+            preempt_policy=config.preempt_policy,
+            admit_mode=config.admit_mode)
+        self.store = HostPageStore(budget_bytes=config.store_budget_bytes,
                                    on_evict=self._drop_prompt_alias)
         self._prompt_index: Dict[Tuple[int, ...], int] = {}
         self.flusher = ds.StagingFlusher(
@@ -269,39 +360,11 @@ class ServingEngine:
         self._decode_fn = jax.jit(self._decode_sample, donate_argnums=(1,))
         self._prefill_fn = jax.jit(self._prefill_chunk_body,
                                    donate_argnums=(1,), static_argnums=(8,))
-        self.stats = {"steps": 0, "prefill_tokens": 0, "decode_tokens": 0,
-                      "flushes": 0, "prefill_dispatches": 0,
-                      "decode_dispatches": 0, "prefix_hits": 0,
-                      "prefill_time_s": 0.0, "store_bytes": 0,
-                      "store_evictions": 0,
-                      # CXL-tier accounting (all zero without a tier):
-                      # simulated ns the restore path stalled on cold-tier
-                      # fetches / the flusher held on EP writes, the EP's
-                      # SR hit rate, DS staging-stack fill, and flush
-                      # windows the EP deferred (QoS admission).
-                      "restore_stall_ns": 0.0, "tier_write_ns": 0.0,
-                      "tier_sr_hit_rate": 0.0,
-                      "tier_store_occupancy": 0.0, "flush_backlog": 0,
-                      "flushes_deferred": 0,
-                      # per-root-port telemetry (multi-port topologies):
-                      # occupancy, queue depth, DevLoad, SR hit rate and
-                      # async in-flight depth per port — refreshed live
-                      # every tick (tier.port_stats() is an in-place
-                      # updated view, so this is allocation-free)
-                      "tier_ports": [],
-                      # request-lifecycle scheduler telemetry: preempted
-                      # slots, page bytes swapped out/in through the
-                      # tier, total async restore in-flight ns and the
-                      # fraction of it hidden behind decode (1.0 = fully
-                      # overlapped), plus current/peak outstanding async
-                      # tier ops and the tier's simulated clock at the
-                      # last tick (requests per simulated second =
-                      # completed / sim_time_ns)
-                      "preemptions": 0, "swap_out_bytes": 0,
-                      "swap_in_bytes": 0, "restore_inflight_ns": 0.0,
-                      "restore_overlap_ratio": 0.0,
-                      "sched_inflight_ops": 0, "sched_inflight_peak": 0,
-                      "sim_time_ns": 0.0}
+        # typed stats: field list = schema (see repro.serving.stats). The
+        # mapping protocol keeps every stats["..."] call site unchanged,
+        # and a typo'd key raises KeyError instead of silently growing
+        # the bench schema.
+        self.stats = EngineStats()
 
     # ----------------------------------------------------------- step fns
     def _step(self, params, cache, tokens):
@@ -365,8 +428,18 @@ class ServingEngine:
         return cache, last_tokens, tok, key
 
     # ------------------------------------------------------------ admit
-    def submit(self, req: Request) -> None:
-        """Enqueue a request (admission happens on a later tick)."""
+    def submit(self, req: Request, *,
+               arrival_ns: Optional[float] = None) -> RequestHandle:
+        """Enqueue a request (admission happens on a later tick).
+
+        Returns a :class:`RequestHandle` the caller polls for completion
+        and per-request SLO timings. ``arrival_ns`` backdates the arrival
+        timestamp onto the simulated clock (the open-loop driver submits
+        a trace whose arrival times were generated ahead of the run);
+        default is the engine clock at submit time.
+        """
+        req.arrival_ns = (self.clock_ns if arrival_ns is None
+                          else float(arrival_ns))
         # Speculative read at enqueue time: if this request's pages sit in
         # the cold tier, pre-share the addresses with the EP (MemSpecRd)
         # now — admission happens ticks later, so the fill runs ahead of
@@ -378,6 +451,7 @@ class ServingEngine:
                 self.tier.speculative_read(
                     key, CxlTier.entry_bytes(self.store.pages[key]))
         self.queue.append(req)
+        return RequestHandle(req, self)
 
     def _batch_axes(self):
         """Locate each cache leaf's batch axis (differencing two shapes)."""
@@ -430,6 +504,8 @@ class ServingEngine:
         req._start_tick = self._tick
         req._n_gen = 1
         req._n_dec = 0
+        if req.first_token_ns is None:
+            req.first_token_ns = self.clock_ns
         self.stats["decode_tokens"] += 1
         if self.sync_prefill:
             tok.block_until_ready()
@@ -462,6 +538,8 @@ class ServingEngine:
             row = np.asarray(logits.astype(jnp.float32)).reshape(
                 -1, logits.shape[-1])[-1]
             req.generated.append(int(row.argmax()))
+            if req.first_token_ns is None:
+                req.first_token_ns = self.clock_ns
             self.stats["decode_tokens"] += 1
 
     # ----------------------------------------------------- prefix restore
@@ -547,6 +625,8 @@ class ServingEngine:
         req.generated = req.generated + [first]
         req._n_gen = 1
         req._n_dec = 0
+        if req.first_token_ns is None:
+            req.first_token_ns = self.clock_ns
 
     # -------------------------------------------------- preemption state
     def _capture_slot_kv(self, slot: int):
@@ -685,6 +765,7 @@ class ServingEngine:
         req = self.slots[slot]
         req.done = True
         req.state = sched.RETIRED
+        req.finish_ns = self.clock_ns
         if not self.legacy:
             self._materialize_tokens(req, slot)
         kv_slot = self._capture_slot_kv(slot)
@@ -720,12 +801,22 @@ class ServingEngine:
             self._trace.pop(t, None)
             self._trace_np.pop(t, None)
 
-    def _drop_prompt_alias(self, rid: int, entry) -> None:
-        """Keep the prompt->rid index in lockstep with store evictions."""
+    def _drop_prompt_alias(self, rid: int, entry, reason: str) -> None:
+        """Keep side state in lockstep with store evictions.
+
+        Drops the prompt->rid alias for the departing entry and — only
+        for true LRU evictions (``reason="evict"``) — releases the
+        entry's CXL-tier segments for reuse. A ``"replace"`` fires while
+        the same rid's fresh pages are being re-inserted (the flush
+        already rewrote the tier segments in place), so freeing there
+        would tear down ranges that are still live.
+        """
         if isinstance(entry, dict):
             prompt = entry.get("prompt")
             if prompt is not None and self._prompt_index.get(prompt) == rid:
                 del self._prompt_index[prompt]
+        if reason == "evict" and self.tier is not None:
+            self.tier.free_entry(rid)
 
     def _store_sink(self, rid: int, entry) -> None:
         if self.tier is not None:
@@ -737,6 +828,7 @@ class ServingEngine:
             nbytes = CxlTier.entry_bytes(entry)
             if self.cxl_async:
                 handle = self.tier.write_entry_async(rid, nbytes)
+                self._async_writes.append(handle)
                 self.stats["tier_write_ns"] += handle.issue_wait_ns
                 self.scheduler._note_inflight_peak()
             else:
@@ -815,6 +907,8 @@ class ServingEngine:
         telemetry is live and cheap — ``tier.port_stats()`` updates its
         per-port dicts in place, so reading it every tick costs no
         allocation churn and no drain."""
+        self.clock_ns += self.tier_step_ns
+        self.stats["clock_ns"] = self.clock_ns
         self.stats["flush_backlog"] = len(self.flusher.pending)
         ss = self.scheduler.stats
         self.stats["preemptions"] = ss["preemptions"]
@@ -828,6 +922,9 @@ class ServingEngine:
         if self.tier is None:
             return
         self.tier.advance(self.tier_step_ns)
+        if self._async_writes:      # retire completed background flushes
+            self._async_writes = [h for h in self._async_writes
+                                  if not self.tier.poll(h)]
         self.stats["sim_time_ns"] = self.tier.topo.now
         self.stats["sched_inflight_ops"] = self.tier.inflight_ops()
         self.stats["tier_sr_hit_rate"] = self.tier.sr_hit_rate()
@@ -835,16 +932,63 @@ class ServingEngine:
         self.stats["tier_ports"] = self.tier.port_stats()
         self.stats["flushes_deferred"] = self.flusher.deferred
 
+    def advance_time(self, dt_ns: float) -> None:
+        """Jump the simulated clock across an idle window (no decode work).
+
+        The open-loop driver calls this when the engine is drained but
+        the next arrival is still in the future: the engine clock and the
+        tier both see the gap (background flushes complete, QoS ladders
+        and GC windows stay live), without charging any decode ticks.
+        """
+        if dt_ns <= 0:
+            return
+        self.clock_ns += float(dt_ns)
+        self.stats["clock_ns"] = self.clock_ns
+        if self.tier is not None:
+            self.tier.advance(float(dt_ns))
+            if self._async_writes:
+                self._async_writes = [h for h in self._async_writes
+                                      if not self.tier.poll(h)]
+            self.stats["sim_time_ns"] = self.tier.topo.now
+            self.stats["sched_inflight_ops"] = self.tier.inflight_ops()
+        self.stats["flushes"] += self.flusher.maybe_flush()
+
+    def _drain_async(self, guard_ticks: int = 10_000) -> None:
+        """Tick simulated time until every outstanding async tier op
+        lands: in-flight restores activate (and their slots settle) and
+        background flush/swap writes retire their ``TierHandle``s — so
+        end-of-run stats (``restore_inflight_ns``, per-port ``inflight``
+        depth) are consistent wherever the horizon fell."""
+        if self.tier is None:
+            return
+        ticks = 0
+        while (self.scheduler.busy() or self.tier.inflight_ops() > 0) \
+                and ticks < guard_ticks:
+            self.tier.advance(self.tier_step_ns)
+            self.clock_ns += self.tier_step_ns
+            self.scheduler.drain()
+            if self._async_writes:
+                self._async_writes = [h for h in self._async_writes
+                                      if not self.tier.poll(h)]
+            ticks += 1
+
     def run(self, max_ticks: int = 1000) -> List[Request]:
         """Tick until the queue, slots and in-flight restores drain (or
         ``max_ticks``); returns the finished requests in retirement
-        order."""
+        order (the pre-``RequestHandle`` return shape, kept as a shim —
+        new callers read their handles instead).
+
+        Whatever the horizon, outstanding async tier ops are drained
+        before returning: pending flushes/swap writes complete on the
+        simulated clock and in-flight restores land (their requests
+        settle into slots; they still need decode ticks to finish)."""
         ticks = 0
         while (self.queue or any(s is not None for s in self.slots)
                or self.scheduler.busy()) and ticks < max_ticks:
             self.step()
             ticks += 1
         self.flusher.maybe_flush()
+        self._drain_async()
         self._tier_tick()
         self.stats["store_bytes"] = self.store.bytes
         self.stats["store_evictions"] = self.store.evictions

@@ -58,6 +58,7 @@ SWAPPED = "SWAPPED"
 RETIRED = "RETIRED"
 
 PREEMPT_POLICIES = ("none", "swap", "recompute")
+ADMIT_MODES = ("continuous", "closed")
 
 
 @dataclasses.dataclass
@@ -82,13 +83,18 @@ class RequestScheduler:
     """
 
     def __init__(self, engine, *, async_restore: bool = False,
-                 preempt_policy: str = "none"):
+                 preempt_policy: str = "none",
+                 admit_mode: str = "continuous"):
         if preempt_policy not in PREEMPT_POLICIES:
             raise ValueError(f"unknown preempt_policy {preempt_policy!r} "
                              f"(expected one of {PREEMPT_POLICIES})")
+        if admit_mode not in ADMIT_MODES:
+            raise ValueError(f"unknown admit_mode {admit_mode!r} "
+                             f"(expected one of {ADMIT_MODES})")
         self.engine = engine
         self.async_restore = bool(async_restore)
         self.preempt_policy = preempt_policy
+        self.admit_mode = admit_mode
         self.inflight: Dict[int, _InflightRestore] = {}   # slot -> fetch
         self.swapped: Dict[int, dict] = {}                # rid -> payload
         self.stats = {"preemptions": 0, "swap_out_bytes": 0,
@@ -100,6 +106,12 @@ class RequestScheduler:
     def busy(self) -> bool:
         """True while any slot's async fetch is still outstanding."""
         return bool(self.inflight)
+
+    def drain(self) -> None:
+        """Poll outstanding async fetches and activate any that landed —
+        the engine's horizon drain calls this between simulated-time
+        advances so RESTORING slots settle without a full decode tick."""
+        self._activate_completed()
 
     def begin_tick(self) -> None:
         """One scheduling pass: activate landed fetches, preempt under
@@ -127,6 +139,8 @@ class RequestScheduler:
             if rec.mode == "swap":
                 eng.slots[slot] = rec.req
                 eng._apply_swap_in(rec.req, slot, rec.entry)
+                if eng.tier is not None:     # swap pages are back in GPU
+                    eng.tier.free_entry(("swap", rec.req.rid))
             else:
                 eng.slots[slot] = rec.req
                 eng._apply_restore(rec.req, slot, rec.entry)
@@ -145,6 +159,12 @@ class RequestScheduler:
 
     def _admit(self) -> None:
         eng = self.engine
+        if self.admit_mode == "closed" and (
+                any(s is not None for s in eng.slots) or self.inflight):
+            # wave batching: the next wave is admitted only once every
+            # slot has drained — the closed-loop baseline the open-loop
+            # load harness compares continuous admit-on-retire against
+            return
         for slot in range(eng.n_slots):
             if eng.slots[slot] is not None or slot in self.inflight \
                     or not eng.queue:
@@ -242,6 +262,7 @@ class RequestScheduler:
             if eng.tier is not None:
                 if self.async_restore:
                     h = eng.tier.write_entry_async(("swap", req.rid), nbytes)
+                    eng._async_writes.append(h)
                     eng.stats["tier_write_ns"] += h.issue_wait_ns
                     self._note_inflight_peak()
                 else:
@@ -282,6 +303,7 @@ class RequestScheduler:
             stall = eng.tier.read_entry(("swap", req.rid), nbytes)
             req.restore_stall_ns += stall
             eng.stats["restore_stall_ns"] += stall
+            eng.tier.free_entry(("swap", req.rid))  # pages back in GPU
         eng.slots[slot] = req
         eng._apply_swap_in(req, slot, entry)
         req.state = RUNNING

@@ -1,0 +1,176 @@
+"""Open-loop load-harness tests: seeded trace determinism, zipf prompt
+popularity against the analytic distribution, the redesigned ServeConfig
+/ RequestHandle / EngineStats API surface, the run() horizon drain, and
+the degenerate one-arrival case where continuous and closed admission
+must produce bit-identical tokens."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import MeshConfig, RunConfig, SHAPES
+from repro.core.tier import CxlTier, TierConfig
+from repro.models import model as M
+from repro.serving import loadgen
+from repro.serving.config import ServeConfig
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.loadgen import LoadConfig
+from repro.serving.stats import EngineStats
+
+
+def _make(arch="qwen3-1.7b", *, tier=None, **kw):
+    cfg = registry.smoke(arch)
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    return ServingEngine(params, cfg, rc, cxl_tier=tier,
+                         config=ServeConfig(**kw))
+
+
+# ------------------------------------------------------- trace generation
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty"])
+def test_trace_deterministic_in_seed(arrival):
+    cfg = LoadConfig(n_arrivals=64, arrival=arrival, hi_prio_frac=0.3,
+                     seed=7)
+    a, b = loadgen.make_trace(cfg), loadgen.make_trace(cfg)
+    assert a == b                         # bit-identical, field for field
+    c = loadgen.make_trace(LoadConfig(n_arrivals=64, arrival=arrival,
+                                      hi_prio_frac=0.3, seed=8))
+    assert a != c                         # the seed actually matters
+
+
+@pytest.mark.parametrize("arrival", ["poisson", "bursty"])
+def test_trace_timestamps_nondecreasing_and_rids_unique(arrival):
+    trace = loadgen.make_trace(LoadConfig(n_arrivals=128, arrival=arrival))
+    ts = [a.t_ns for a in trace]
+    assert all(t1 >= t0 for t0, t1 in zip(ts, ts[1:]))
+    assert sorted(a.rid for a in trace) == list(range(128))
+    assert all(a.max_new in (4, 8, 16) for a in trace)
+    assert all(len(a.prompt) in (8, 16, 32) for a in trace)
+
+
+def test_zipf_popularity_matches_analytic_distribution():
+    cfg = LoadConfig(n_arrivals=20_000, n_prompts=8, zipf_s=1.2, seed=3)
+    trace = loadgen.make_trace(cfg)
+    p = loadgen.zipf_probs(cfg)
+    counts = np.bincount([a.prompt_id for a in trace],
+                         minlength=cfg.n_prompts)
+    n = cfg.n_arrivals
+    # each rank's count is Binomial(n, p_k): stay within 4 sigma
+    sigma = np.sqrt(n * p * (1 - p))
+    assert np.all(np.abs(counts - n * p) < 4 * sigma + 1)
+    # and the skew is real: rank 0 strictly dominates the tail rank
+    assert counts[0] > counts[-1] * 2
+
+
+def test_trace_prompts_shared_across_arrivals():
+    cfg = LoadConfig(n_arrivals=200, n_prompts=4, zipf_s=1.5, seed=0)
+    trace = loadgen.make_trace(cfg)
+    assert len({a.prompt for a in trace}) <= cfg.n_prompts
+    same_id = {}
+    for a in trace:
+        assert same_id.setdefault(a.prompt_id, a.prompt) == a.prompt
+
+
+def test_load_config_validation():
+    with pytest.raises(ValueError, match="arrival mode"):
+        LoadConfig(arrival="uniform")
+    with pytest.raises(ValueError, match="rate_rps"):
+        LoadConfig(rate_rps=0.0)
+    with pytest.raises(ValueError, match="zipf_s"):
+        LoadConfig(zipf_s=-1.0)
+    with pytest.raises(ValueError, match="burst_factor"):
+        LoadConfig(arrival="bursty", burst_factor=1.0)
+    with pytest.raises(ValueError, match="choice sets"):
+        LoadConfig(prompt_len_choices=())
+
+
+# ------------------------------------------------------- redesigned API
+
+def test_serve_config_rejects_conflicting_knobs(mesh_ctx):
+    with pytest.raises(ValueError, match="admit_mode"):
+        ServeConfig(admit_mode="waves")
+    with pytest.raises(ValueError):
+        ServeConfig(admit_mode="closed", preempt_policy="swap")
+    cfg = registry.smoke("qwen3-1.7b")
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(params, cfg, rc, config=ServeConfig(), n_slots=2)
+
+
+def test_engine_stats_rejects_unknown_keys():
+    st = EngineStats()
+    with pytest.raises(KeyError):
+        st["not_a_stat"]
+    with pytest.raises(KeyError):
+        st["not_a_stat"] = 1
+    st["decode_tokens"] += 3              # known keys keep dict ergonomics
+    assert st.as_dict()["decode_tokens"] == 3
+    assert set(st.as_dict()) == set(EngineStats.field_names())
+
+
+def test_request_handle_lifecycle(mesh_ctx):
+    eng = _make(n_slots=2, max_seq=64, prefill_chunk=8)
+    h = eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4))
+    assert h.rid == 0 and not h.done()
+    with pytest.raises(RuntimeError):
+        h.result()
+    eng.run()
+    assert h.done()
+    assert h.result() == h.request.generated and len(h.result()) == 4
+    assert h.ttft_ns is not None and h.ttft_ns >= 0
+    assert h.tpot_ns is not None and h.tpot_ns > 0
+    assert h.restore_stall_ns == 0.0
+
+
+def test_run_drains_async_tier_ops_at_horizon(mesh_ctx):
+    tier = CxlTier(TierConfig(media="ssd-slow"))
+    eng = _make(n_slots=2, max_seq=64, prefill_chunk=8, tier=tier,
+                cxl_async=True)
+    for rid in range(4):
+        eng.submit(Request(rid=rid, prompt=[rid + 1, 2, 3],
+                           max_new_tokens=4))
+    eng.run()
+    assert tier.inflight_ops() == 0       # background flushes retired
+    assert not eng.scheduler.busy()
+    assert eng._async_writes == []
+
+
+def test_tier_free_entry_recycles_segments():
+    tier = CxlTier(TierConfig(media="dram"))
+    tier.write_entry("a", 8192)
+    base0 = tier._segments["a"][0][1]
+    freed = tier.free_entry("a")
+    assert freed == 8192 and "a" not in tier._segments
+    assert tier.port_stats()[0]["free_bytes"] == 8192
+    tier.write_entry("b", 8192)           # exact fit: recycles a's pages
+    assert tier._segments["b"][0][1] == base0
+    assert tier.counters["frees"] == 1
+    assert tier.counters["reused_segments"] == 1
+    assert tier.port_stats()[0]["free_bytes"] == 0
+    assert tier.free_entry("missing") == 0
+
+
+# ------------------------------------------------- open-loop degenerate
+
+def test_one_arrival_continuous_equals_closed(mesh_ctx):
+    lc = LoadConfig(n_arrivals=1, prompt_len_choices=(8,),
+                    max_new_choices=(6,), seed=11)
+    trace = loadgen.make_trace(lc)
+    tokens = {}
+    for mode in ("continuous", "closed"):
+        eng = _make(n_slots=2, max_seq=64, prefill_chunk=8,
+                    admit_mode=mode)
+        handles, depths = loadgen.drive_open_loop(eng, trace)
+        m = loadgen.summarize(eng, handles, depths, lc)
+        assert m.completed == m.arrivals == 1
+        tokens[mode] = handles[0].result()
+    assert tokens["continuous"] == tokens["closed"]
+    # and both match a direct submit()+run() of the same request
+    eng = _make(n_slots=2, max_seq=64, prefill_chunk=8)
+    a = trace[0]
+    h = eng.submit(Request(rid=a.rid, prompt=list(a.prompt),
+                           max_new_tokens=a.max_new))
+    eng.run()
+    assert h.result() == tokens["continuous"]
