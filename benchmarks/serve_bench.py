@@ -25,11 +25,19 @@ more requests per simulated second than FIFO under pressure, and that
 every (port-tagged, async) op trace replays within 1% of the scalar
 oracle.
 
+``--load`` adds the open-loop load axis (closed vs continuous vs
+preempt+swap admission on one seeded bursty trace, gated on goodput)
+and, nested under it, the **fault axis**: a mixed-family fleet (MoE /
+hybrid / xLSTM) runs one identical arrival trace healthy and under one
+identical endpoint-fault trace (transient + degrade + hot-remove),
+gated on zero lost requests, faulted goodput within a bounded factor of
+healthy, bounded retries, and fault-annotated replay within 1%.
+
 Emits BENCH_serve.json with both sides + speedups so the perf trajectory
 has a serving datapoint. Run:
 
   PYTHONPATH=src python benchmarks/serve_bench.py --smoke --cxl-tier \
-      --out BENCH_serve.json
+      --load --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -104,11 +112,13 @@ SCHEMA_KEYS = {
                        "swap_in_bytes", "inflight_peak", "prefix_hits",
                        "replay_within_1pct"),
     "engine_stats": _STATS.EngineStats.field_names(),
-    "load": ("config", "batching", "scheduling", "acceptance"),
+    "load": ("config", "batching", "scheduling", "fault", "acceptance"),
     "load_config": _LOADGEN.LoadConfig.field_names()
     + ("n_slots", "max_seq", "max_ticks"),
     "load_scenario": _STATS.LoadMetrics.field_names()
     + ("engine", "replay_within_1pct"),
+    "fault": ("config", "fleet", "acceptance"),
+    "fault_config_extra": ("fleet", "topology", "trace"),
 }
 
 
@@ -160,7 +170,10 @@ def check_schema(out) -> list:
                      SCHEMA_KEYS["sched_scenario"])
     load = out.get("load")
     if load is not None:
-        diff("load", load, SCHEMA_KEYS["load"])
+        load_keys = set(SCHEMA_KEYS["load"])
+        if "fault" not in load:
+            load_keys.discard("fault")
+        diff("load", load, load_keys)
         diff("load.config", load.get("config", {}),
              SCHEMA_KEYS["load_config"])
         for axis in ("batching", "scheduling"):
@@ -169,6 +182,19 @@ def check_schema(out) -> list:
                      SCHEMA_KEYS["load_scenario"])
                 diff(f"load[{axis}][{mode}].engine", scen.get("engine", {}),
                      SCHEMA_KEYS["engine_stats"])
+        fault = load.get("fault")
+        if fault is not None:
+            diff("load.fault", fault, SCHEMA_KEYS["fault"])
+            diff("load.fault.config", fault.get("config", {}),
+                 SCHEMA_KEYS["load_config"]
+                 + SCHEMA_KEYS["fault_config_extra"])
+            for arch, per in fault.get("fleet", {}).items():
+                for mode, scen in per.items():
+                    diff(f"load.fault[{arch}][{mode}]", scen,
+                         SCHEMA_KEYS["load_scenario"])
+                    diff(f"load.fault[{arch}][{mode}].engine",
+                         scen.get("engine", {}),
+                         SCHEMA_KEYS["engine_stats"])
     return errs
 
 
@@ -431,7 +457,8 @@ def _replay_ok(tier) -> bool:
         sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
         req_bytes=tier.cfg.req_bytes,
         dram_cache_bytes=tier.cfg.dram_cache_bytes,
-        max_inflight=tier.cfg.max_inflight)
+        max_inflight=tier.cfg.max_inflight,
+        faults=tier.cfg.faults)
     return bool(np.allclose(np.asarray(tier.op_ns), oracle,
                             rtol=0.01, atol=1e-6))
 
@@ -755,6 +782,113 @@ def bench_load(params, cfg, rc, *, prefill_chunk: int, seed: int,
             "scheduling": scheduling, "acceptance": acceptance}
 
 
+# fault axis: the mixed-family fleet (one member per KV family shape —
+# paged-KV moe, hybrid mamba2, pure-ssm xlstm) driven through one
+# identical failure trace on a 2-port tier: a transient-error window on
+# port 0, then a latency spike on port 1, then port 1 hot-removed for
+# good — against the identical healthy arrival trace.
+FAULT_FLEET = ("granite-moe-1b-a400m", "zamba2-2.7b", "xlstm-125m")
+FAULT_TOPOLOGY = ("dram", "ssd-fast")
+FAULT_TRACE = (
+    ("transient", 0.5e6, 0, 0.85, 6.0e6),   # flaky CXL.mem window
+    ("degrade", 1.0e6, 1, 300.0, 8.0e6),    # backend latency spike
+    ("hot_remove", 3.0e6, 1),               # then the endpoint dies
+)
+
+
+def bench_fault(*, prefill_chunk: int, seed: int, smoke: bool,
+                vocab: int, dtype: str):
+    """Fault-injection axis of the load section (``load["fault"]``).
+
+    Each fleet member runs the same seeded open-loop arrival trace twice
+    — healthy, and under ``FAULT_TRACE`` (transient window -> degrade ->
+    hot-remove on a 2-port tier) with ``preempt_policy="recompute"`` so
+    page loss always has a resume path. Acceptance (the degraded-mode
+    SLO gates): every submitted request completes under faults
+    (``lost_requests == 0``), degraded goodput stays within 0.25x the
+    healthy run on the identical trace, transient retries stay inside
+    the per-op budget and recoveries inside the per-request force-
+    prefill bound (no livelock), the faulted runs actually exercised the
+    fault machinery, and every trace — fault-annotated kinds included —
+    replays within 1% of the scalar oracle.
+    """
+    from repro.serving.config import ServeConfig
+    from repro.serving.engine import ServingEngine
+    from repro.serving.scheduler import RECOVERY_PREFILL_AFTER
+    from repro.sim.engine import MAX_OP_RETRIES
+
+    n_slots = 8
+    max_seq = 64
+    max_ticks = 4_000 if smoke else 40_000
+    lc = _LOADGEN.LoadConfig(
+        n_arrivals=24 if smoke else 192,
+        rate_rps=8000.0,
+        arrival="bursty",
+        zipf_s=1.2,
+        n_prompts=8 if smoke else 32,
+        prompt_len_choices=(8, 16),
+        max_new_choices=(4, 8),
+        vocab=vocab or 256,
+        seed=seed,
+        slo_ttft_ms=2.0,
+        slo_tpot_ms=0.5)
+    trace = _LOADGEN.make_trace(lc)
+
+    def run_one(params, cfg, rc, faults):
+        eng = ServingEngine(params, cfg, rc, config=ServeConfig(
+            n_slots=n_slots, max_seq=max_seq,
+            prefill_chunk=prefill_chunk, seed=seed,
+            cxl_async=True, preempt_policy="recompute",
+            tier_topology=FAULT_TOPOLOGY, tier_faults=faults,
+            fault_seed=seed))
+        handles, depths = _LOADGEN.drive_open_loop(eng, trace,
+                                                   max_ticks=max_ticks)
+        res = _LOADGEN.summarize(eng, handles, depths, lc).as_dict()
+        res["engine"] = eng.stats.as_dict()
+        res["replay_within_1pct"] = _replay_ok(eng.tier)
+        return res
+
+    fleet = {}
+    for arch in FAULT_FLEET:
+        cfg, rc, params = _build(arch, seed, vocab, dtype)
+        fleet[arch] = {"healthy": run_one(params, cfg, rc, ()),
+                       "faulted": run_one(params, cfg, rc, FAULT_TRACE)}
+
+    def goodput_ratio(per) -> float:
+        h, f = per["healthy"], per["faulted"]
+        if h["goodput_req_s"] > 0:
+            return f["goodput_req_s"] / h["goodput_req_s"]
+        if h["throughput_req_s"] > 0:      # degenerate SLO: fall back to
+            return (f["throughput_req_s"]  # raw completion rate
+                    / h["throughput_req_s"])
+        return 1.0
+
+    faulted = [per["faulted"] for per in fleet.values()]
+    acceptance = {
+        "fault_zero_lost_requests": all(
+            s["lost_requests"] == 0 for s in faulted),
+        "fault_goodput_within_bound": all(
+            goodput_ratio(per) >= 0.25 for per in fleet.values()),
+        "fault_retries_bounded": all(
+            s["engine"]["tier_fault_retries"]
+            <= max(s["engine"]["tier_fault_ops"], 1) * (MAX_OP_RETRIES + 1)
+            and s["recoveries"]
+            <= lc.n_arrivals * (RECOVERY_PREFILL_AFTER + 1)
+            for s in faulted),
+        "fault_injection_engaged": any(
+            s["engine"]["tier_fault_ops"] > 0
+            or s["engine"]["tier_lost_entries"] > 0 for s in faulted),
+        "fault_replay_within_1pct": all(
+            s["replay_within_1pct"]
+            for per in fleet.values() for s in per.values()),
+    }
+    config = {k: getattr(lc, k) for k in lc.field_names()}
+    config.update(n_slots=n_slots, max_seq=max_seq, max_ticks=max_ticks,
+                  fleet=list(FAULT_FLEET), topology=list(FAULT_TOPOLOGY),
+                  trace=[list(e) for e in FAULT_TRACE])
+    return {"config": config, "fleet": fleet, "acceptance": acceptance}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -821,6 +955,10 @@ def main(argv=None) -> int:
         load = bench_load(params, cfg, rc, prefill_chunk=8,
                           seed=args.seed, smoke=bool(args.smoke)) \
             if args.load else None
+        if load is not None:
+            load["fault"] = bench_fault(
+                prefill_chunk=8, seed=args.seed, smoke=bool(args.smoke),
+                vocab=args.vocab, dtype=args.dtype)
     legacy = pair["legacy_host_path"]
     device = pair["device_resident"]
 
@@ -895,6 +1033,14 @@ def main(argv=None) -> int:
             "continuous": load["batching"]["continuous"]["ttft_ms_p99"],
             "preempt_swap":
                 load["scheduling"]["preempt_swap"]["ttft_ms_p99"]}
+        fault = load["fault"]
+        summary["fault_acceptance"] = fault["acceptance"]
+        summary["fault_goodput_req_s"] = {
+            arch: {m: per[m]["goodput_req_s"] for m in per}
+            for arch, per in fault["fleet"].items()}
+        summary["fault_recoveries"] = {
+            arch: per["faulted"]["recoveries"]
+            for arch, per in fault["fleet"].items()}
     print(json.dumps(summary, indent=2))
     if not acceptance["prefix_restore_zero_prefill"]:
         print("FAIL: resubmitted rid was not served via prefix restore",
@@ -907,6 +1053,11 @@ def main(argv=None) -> int:
     if load is not None and not all(load["acceptance"].values()):
         print(f"FAIL: load acceptance {load['acceptance']}",
               file=sys.stderr)
+        return 1
+    if load is not None and "fault" in load \
+            and not all(load["fault"]["acceptance"].values()):
+        print("FAIL: fault acceptance "
+              f"{load['fault']['acceptance']}", file=sys.stderr)
         return 1
     return 0
 

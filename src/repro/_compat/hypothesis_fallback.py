@@ -79,6 +79,19 @@ def booleans() -> Strategy:
     return Strategy(lambda rng: rng.random() < 0.5, "booleans")
 
 
+def one_of(*strategies: Strategy) -> Strategy:
+    # real hypothesis accepts one_of(a, b) and one_of([a, b])
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    opts = list(strategies)
+    return Strategy(lambda rng: rng.choice(opts).draw(rng),
+                    "one_of(%s)" % ",".join(s.name for s in opts))
+
+
+def just(value: Any) -> Strategy:
+    return Strategy(lambda rng: value, f"just({value!r})")
+
+
 def given(*arg_strategies: Strategy, **kw_strategies: Strategy):
     """Run the wrapped test once per generated example (seeded, so runs
     are reproducible; the failing example's values appear in the
@@ -138,7 +151,7 @@ def register() -> None:
     mod.HealthCheck = types.SimpleNamespace(too_slow=None, filter_too_much=None)
     st = types.ModuleType("hypothesis.strategies")
     for name in ("integers", "floats", "lists", "tuples", "sampled_from",
-                 "booleans"):
+                 "booleans", "one_of", "just"):
         setattr(st, name, globals()[name])
     mod.strategies = st
     sys.modules["hypothesis"] = mod

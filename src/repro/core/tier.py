@@ -56,8 +56,11 @@ import hashlib
 from typing import Dict, List, Optional, Tuple
 
 from repro.sim.engine import (MAX_INFLIGHT_OPS, PAGE_ADVANCE, PAGE_PREFETCH,
-                              PAGE_READ, PAGE_READ_ASYNC, PAGE_WRITE,
-                              PAGE_WRITE_ASYNC, OpHandle, Topology)
+                              PAGE_READ, PAGE_READ_ASYNC,
+                              PAGE_READ_ASYNC_FAULT, PAGE_READ_FAULT,
+                              PAGE_WRITE, PAGE_WRITE_ASYNC,
+                              PAGE_WRITE_ASYNC_FAULT, PAGE_WRITE_FAULT,
+                              FaultSchedule, OpHandle, Topology)
 from repro.sim.media import resolve_media
 
 # Serving media bins -> simulator media parts (Table 1a). "ssd-fast" is the
@@ -126,6 +129,12 @@ class TierConfig:
     placement: str = "striped"       # striped | hashed | hotness
     hot_promote_after: int = 2       # restores before promotion (hotness)
     hot_budget_bytes: int = 256 << 10   # fast-port residency budget
+    # ---- fault injection ----------------------------------------------
+    # a repro.sim.engine.FaultSchedule the topology's ports consult:
+    # degrade windows scale media service time, transient windows fail op
+    # attempts into bounded retry-with-backoff, hot_remove kills a port
+    # (every entry with a segment on it is lost — see CxlTier.poll_faults)
+    faults: Optional[FaultSchedule] = None
 
     def __post_init__(self):
         """Validate the placement policy and async cap early."""
@@ -178,6 +187,13 @@ class TierHandle:
         """Simulated ns the entry op was outstanding (issue -> done)."""
         return self.done_ns - self.issued_ns
 
+    @property
+    def failed(self) -> bool:
+        """True if any lane failed — its port was hot-removed or the
+        transient-retry budget was exhausted. A failed fetch means the
+        entry's pages never landed; the serving layer must recover."""
+        return any(lane.failed for lane in self.lanes)
+
 
 class CxlTier:
     """Per-page latency accounting for the serving engine's tiered pages.
@@ -200,7 +216,8 @@ class CxlTier:
                              ds=config.ds_enabled,
                              req_bytes=config.req_bytes,
                              dram_cache_bytes=config.dram_cache_bytes,
-                             max_inflight=config.max_inflight)
+                             max_inflight=config.max_inflight,
+                             faults=config.faults)
         n = self.topo.n_ports
         # key -> [(port, base, capacity_bytes)] segments, striping order
         self._segments: Dict[object, List[Tuple[int, int, int]]] = {}
@@ -216,9 +233,13 @@ class CxlTier:
         # hotness-policy state
         self._heat: Dict[object, int] = {}           # restore counts
         self._fast_resident: Dict[object, int] = {}  # key -> bytes, LRU-ish
-        reads = [resolve_media(m).read_ns for m in config.port_medias]
-        self._fast_port = int(min(range(n), key=lambda i: reads[i]))
-        self._slow_port = int(max(range(n), key=lambda i: reads[i]))
+        self._down_ports: set = set()    # hot-removed (detected) ports
+        self.lost_keys: List[object] = []  # invalidated, pending takeout
+        self.last_entry_failed = False   # latest blocking entry op's fate
+        self._port_mults: Tuple[float, ...] = (1.0,) * n
+        self._fast_port = 0
+        self._slow_port = 0
+        self._recompute_hot_ports()
         self.ops: List[tuple] = []       # (kind,addr,nbytes) or port-tagged
         self.op_ns: List[float] = []     # charged latencies (ns)
         self.trace_truncated = False     # ops past trace_cap went unrecorded
@@ -232,7 +253,12 @@ class CxlTier:
                          "promotions": 0, "demotions": 0,
                          "migrate_ns": 0.0,
                          "frees": 0, "freed_bytes": 0,
-                         "reused_segments": 0}
+                         "reused_segments": 0,
+                         "fault_ops": 0,        # fault-annotated page ops
+                         "lost_entries": 0,     # entries torn by hot-remove
+                         "lost_bytes": 0,
+                         "noop_frees": 0,       # double/unknown frees
+                         "dead_segment_frees": 0}  # frees on removed ports
 
     # ------------------------------------------------------------ helpers
     @property
@@ -248,21 +274,55 @@ class CxlTier:
         return sum(a.nbytes for a in jax.tree_util.tree_leaves(entry)
                    if hasattr(a, "nbytes"))
 
+    def _alive_ports(self) -> List[int]:
+        """Ports still serviceable (not hot-removed); raises once the
+        whole topology is gone — there is nothing left to place on."""
+        alive = [p for p in range(self.topo.n_ports)
+                 if p not in self._down_ports]
+        if not alive:
+            raise RuntimeError("every root port has been hot-removed; "
+                               "the tier has no serviceable media left")
+        return alive
+
+    def _recompute_hot_ports(self) -> None:
+        """Pick the hotness policy's fast/slow ports among *alive* ports,
+        weighting each media's read service time by its current degrade
+        multiplier — a degraded DRAM port can lose fast status to a
+        healthy SSD port, which is what steers placement away from it."""
+        alive = [p for p in range(self.topo.n_ports)
+                 if p not in self._down_ports]
+        if not alive:
+            return
+        medias = self.cfg.port_medias
+
+        def eff_read_ns(p: int) -> float:
+            return (resolve_media(medias[p]).read_ns *
+                    self.topo.ports[p].degrade_mult)
+
+        self._fast_port = int(min(alive, key=eff_read_ns))
+        self._slow_port = int(max(alive, key=eff_read_ns))
+
     # --------------------------------------------------------- placement
     def _stripe_order(self, key) -> List[int]:
-        """Port visit order for a new entry under the active placement."""
-        n = self.topo.n_ports
+        """Port visit order for a new entry under the active placement.
+
+        Hot-removed ports never appear: striping, hashing and hotness all
+        run over the alive set, so new and re-placed entries re-stripe
+        around dead ports automatically.
+        """
+        alive = self._alive_ports()
+        n = len(alive)
         if n == 1:
-            return [0]
+            return [alive[0]]
         if self.cfg.placement == "hashed":
-            return [_stable_hash(key) % n]
+            return [alive[_stable_hash(key) % n]]
         if self.cfg.placement == "hotness":
             # entries start on the capacity ports; the fast (DRAM) port is
             # reserved for promoted-hot entries (unless it is the only one)
-            cands = [p for p in range(n) if p != self._fast_port] or [0]
+            cands = [p for p in alive if p != self._fast_port] or [alive[0]]
             return [cands[_stable_hash(key) % len(cands)]]
         start = self._entry_counter % n          # striped round-robin
-        return [(start + j) % n for j in range(n)]
+        return [alive[(start + j) % n] for j in range(n)]
 
     def _allocate(self, key, nbytes: int,
                   ports: Optional[List[int]] = None
@@ -339,8 +399,21 @@ class CxlTier:
 
     # ----------------------------------------------------------- charging
     def _charge(self, port: int, kind: int, addr: int, nbytes: int) -> float:
-        """Execute one op on its port and record it in the trace (ns)."""
+        """Execute one op on its port and record it in the trace (ns).
+
+        Blocking reads/writes that crossed the fault path (retried under
+        a transient window, or failed on a downed port) are recorded
+        under their fault-annotated kind, so the trace is self-describing
+        — replaying it demands the run's :class:`FaultSchedule`."""
         lat = self.topo.op(port, kind, addr, nbytes)
+        if kind in (PAGE_READ, PAGE_WRITE) and self.cfg.faults is not None:
+            ps = self.topo.ports[max(port, 0)]
+            self.last_entry_failed = (self.last_entry_failed
+                                      or ps.last_op_failed)
+            if ps.last_op_retries or ps.last_op_failed:
+                kind = (PAGE_READ_FAULT if kind == PAGE_READ
+                        else PAGE_WRITE_FAULT)
+                self.counters["fault_ops"] += 1
         if len(self.ops) < self.cfg.trace_cap:
             self.ops.append((port, kind, addr, nbytes) if self.cfg.tagged
                             else (kind, addr, nbytes))
@@ -352,11 +425,18 @@ class CxlTier:
     def _charge_async(self, port: int, kind: int, addr: int,
                       nbytes: int) -> OpHandle:
         """Issue one async op on its port; the recorded latency is the
-        issue-slot wait (what the caller actually paid at issue)."""
+        issue-slot wait (what the caller actually paid at issue). Ops
+        that crossed the fault path record under their fault-annotated
+        kind, like :meth:`_charge`."""
         handle = self.topo.issue(port, kind, addr, nbytes)
+        rec = kind
+        if (handle.retries or handle.failed) and self.cfg.faults is not None:
+            rec = (PAGE_READ_ASYNC_FAULT if kind == PAGE_READ_ASYNC
+                   else PAGE_WRITE_ASYNC_FAULT)
+            self.counters["fault_ops"] += 1
         if len(self.ops) < self.cfg.trace_cap:
-            self.ops.append((port, kind, addr, nbytes) if self.cfg.tagged
-                            else (kind, addr, nbytes))
+            self.ops.append((port, rec, addr, nbytes) if self.cfg.tagged
+                            else (rec, addr, nbytes))
             self.op_ns.append(handle.wait_ns)
         else:
             self.trace_truncated = True
@@ -383,6 +463,7 @@ class CxlTier:
         is the *slowest lane's* time, not the sum — this is where flushes
         to distinct ports stop serializing.
         """
+        self.last_entry_failed = False
         held = 0.0
         for port, addr, n in self._place(key, nbytes):
             held = max(held, self._charge(port, PAGE_WRITE, addr, n))
@@ -399,14 +480,17 @@ class CxlTier:
         trigger promotion/demotion (charged separately, see
         :meth:`_rebalance`).
         """
+        self.last_entry_failed = False
         stall = 0.0
         for port, addr, n in self._place(key, nbytes):
             stall = max(stall, self._charge(port, PAGE_READ, addr, n))
         self.counters["reads"] += 1
         self.counters["read_ns"] += stall
+        failed = self.last_entry_failed
         if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
             self._heat[key] = self._heat.get(key, 0) + 1
             self._rebalance(key, nbytes)
+        self.last_entry_failed = failed  # migration charges don't mask it
         return stall
 
     def write_entry_async(self, key, nbytes: int) -> TierHandle:
@@ -460,23 +544,49 @@ class CxlTier:
         (a later same-shape allocation recycles them — see
         :meth:`_allocate`), and the hotness state for the key is dropped.
         Freeing charges nothing: deallocation is metadata, only page
-        *movement* costs simulated time. Unknown keys are a no-op
-        (returns 0) so callers can free unconditionally on eviction.
+        *movement* costs simulated time. Unknown keys — including a
+        second free of the same key, since the first pops its segments —
+        are a counted no-op (``counters["noop_frees"]``, returns 0) so
+        callers can free unconditionally on eviction without ever
+        corrupting the free lists. Segments on a hot-removed port are
+        dropped, not recycled (their address space died with the port —
+        ``counters["dead_segment_frees"]``), and a base resurfacing in a
+        bucket it already sits in raises rather than poisoning the
+        allocator.
         """
         segs = self._segments.pop(key, None)
         if segs is None:
+            self.counters["noop_frees"] += 1
             return 0
         pg = self.cfg.page_bytes
         freed = 0
         for p, base, length in segs:
             self._live_bytes[p] -= length
-            self._free[p].setdefault(length // pg, []).append(base)
+            if p in self._down_ports:
+                self.counters["dead_segment_frees"] += 1
+            else:
+                bucket = self._free[p].setdefault(length // pg, [])
+                if base in bucket:
+                    raise RuntimeError(
+                        f"free-list corruption: port {p} base {base:#x} "
+                        "already sits in its free bucket")
+                bucket.append(base)
             freed += length
         self._heat.pop(key, None)
         self._fast_resident.pop(key, None)
         self.counters["frees"] += 1
         self.counters["freed_bytes"] += freed
         return freed
+
+    def has_entry(self, key) -> bool:
+        """True while ``key`` still maps to live segments on this tier.
+
+        The serving layer's recovery path uses this to tell a transient
+        fetch failure (entry intact — retry the read) apart from page
+        loss (entry invalidated by a hot-remove — the copy is gone and
+        the request must fall back to the host store or recompute).
+        """
+        return key in self._segments
 
     def speculative_read(self, key, nbytes: int) -> None:
         """MemSpecRd the entry's port ranges ahead of the demand fetch."""
@@ -489,11 +599,100 @@ class CxlTier:
     def advance(self, dt_ns: float) -> None:
         """Idle engine-tick time (ns): the topology drains (barrier) and
         every port sees the idle window — background flush / GC windows
-        open and the QoS ladders stay live."""
+        open, the QoS ladders stay live, and (under a fault schedule)
+        newly-fired fault events are folded in via :meth:`poll_faults`."""
         if self.cfg.tagged:
             self._charge(-1, PAGE_ADVANCE, 0, int(dt_ns))
         else:
             self._charge(0, PAGE_ADVANCE, 0, int(dt_ns))
+        if self.cfg.faults is not None:
+            self.poll_faults()
+
+    # ------------------------------------------------------ fault handling
+    def _invalidate_port(self, port: int) -> List[object]:
+        """Tear down every entry with a segment on a hot-removed port.
+
+        A torn entry is a lost entry: partial lanes are useless for a
+        restore, so the whole mapping goes. Segments on still-alive ports
+        recycle through their free lists; the dead port's address space
+        (segments, free lists, bump cursor) is abandoned wholesale.
+        Returns the lost keys.
+        """
+        pg = self.cfg.page_bytes
+        lost = []
+        for key, segs in list(self._segments.items()):
+            if not any(p == port for p, _, _ in segs):
+                continue
+            del self._segments[key]
+            nbytes = 0
+            for p, base, length in segs:
+                self._live_bytes[p] -= length
+                nbytes += length
+                if p not in self._down_ports:
+                    self._free[p].setdefault(length // pg, []).append(base)
+            self._heat.pop(key, None)
+            self._fast_resident.pop(key, None)
+            lost.append(key)
+            self.counters["lost_entries"] += 1
+            self.counters["lost_bytes"] += nbytes
+        self._free[port] = {}
+        self._live_bytes[port] = 0
+        return lost
+
+    def poll_faults(self) -> List[object]:
+        """Fold newly-fired fault events into placement state.
+
+        Newly hot-removed ports invalidate every entry mapped onto them
+        (the lost keys are returned and queued on ``lost_keys`` until
+        :meth:`take_lost_keys` drains them — the serving layer's recovery
+        entry point), and any down/degrade change re-derives the hotness
+        policy's fast/slow ports over the alive set. If the fast port
+        loses its status to a degrade window, resident hot entries are
+        demoted off it (charged migrations) — the DevLoad-visible latency
+        spike steers future placement *and* evacuates current residents.
+        """
+        if self.cfg.faults is None:
+            return []
+        newly: List[object] = []
+        for p in self.topo.ports_down():
+            if p not in self._down_ports:
+                self._down_ports.add(p)
+                newly.extend(self._invalidate_port(p))
+        mults = tuple(p.degrade_mult for p in self.topo.ports)
+        if newly or mults != self._port_mults:
+            self._port_mults = mults
+            old_fast = self._fast_port
+            self._recompute_hot_ports()
+            if (self.cfg.placement == "hotness"
+                    and self._fast_port != old_fast
+                    and old_fast not in self._down_ports):
+                self._demote_all_fast(old_fast)
+        self.lost_keys.extend(newly)
+        return newly
+
+    def take_lost_keys(self) -> List[object]:
+        """Drain the pending lost-entry queue (serving recovery hook)."""
+        out, self.lost_keys = self.lost_keys, []
+        return out
+
+    def _demote_all_fast(self, old_fast: int) -> None:
+        """Evacuate hotness residents off a demoted (degraded) fast port:
+        each is read off its current segments and rewritten onto the
+        (healthy) slow port — standard demotion, charged like any other
+        migration; the entries re-earn promotion onto the new fast port
+        through restore heat."""
+        for victim in list(self._fast_resident):
+            vbytes = self._fast_resident.pop(victim)
+            for p, addr, cap in self._segments.get(victim, []):
+                self.counters["migrate_ns"] += self._charge(
+                    p, PAGE_READ, addr, min(cap, vbytes))
+            moved = self._allocate(victim, vbytes,
+                                   ports=[self._slow_port])
+            for _, addr, cap in moved:
+                self.counters["migrate_ns"] += self._charge(
+                    self._slow_port, PAGE_WRITE, addr, min(cap, vbytes))
+            self._heat[victim] = 0
+            self.counters["demotions"] += 1
 
     # ------------------------------------------------ hotness rebalancing
     def _rebalance(self, key, nbytes: int) -> None:
@@ -600,6 +799,10 @@ class CxlTier:
             d["queue_depth"] = len(ctl.memory_queue)
             d["devload"] = int(ctl.qos.last_devload)
             d["inflight"] = p.inflight_depth()
+            d["down"] = p.down
+            d["degrade_mult"] = p.degrade_mult
+            d["fault_retries"] = p.fault_retries
+            d["fault_failures"] = p.fault_failures
         return self._port_stat_dicts
 
     def snapshot(self) -> Dict[str, object]:
@@ -642,4 +845,15 @@ class CxlTier:
             "ports": ports,
             "trace_ops": len(self.ops),
             "trace_truncated": self.trace_truncated,
+            "fault_ops": self.counters["fault_ops"],
+            "fault_retries": sum(p.fault_retries for p in self.topo.ports),
+            "fault_failures": sum(p.fault_failures
+                                  for p in self.topo.ports),
+            "fault_backoff_ns": sum(p.fault_backoff_ns
+                                    for p in self.topo.ports),
+            "lost_entries": self.counters["lost_entries"],
+            "lost_bytes": self.counters["lost_bytes"],
+            "ports_down": sorted(self._down_ports),
+            "noop_frees": self.counters["noop_frees"],
+            "dead_segment_frees": self.counters["dead_segment_frees"],
         }

@@ -24,6 +24,12 @@ open-loop continuous-batching harness: a seeded arrival trace
 popularity) is played against the engine on the simulated clock and the
 SLO summary (TTFT/TPOT p50/p99, goodput at the latency targets, queue
 depth) is printed instead of wall-clock throughput.
+
+``--fault-trace degrade|flaky|hot-remove|mix`` injects a named endpoint
+fault preset into the attached tier (a deterministic
+``FaultSchedule`` seeded by ``--fault-seed``) and prints a recovery
+stats line: fault ops / retries / failures, entries and bytes lost to
+hot-removed ports, and requests re-queued through RECOVERING.
 """
 from __future__ import annotations
 
@@ -41,6 +47,35 @@ from repro.serving.engine import Request, ServingEngine
 
 # single source of truth for the CLI defaults below
 _DEF = ServeConfig()
+
+# named endpoint-fault presets (--fault-trace); times are simulated ns
+# into the run, sized for the smoke/open-loop horizons. ``port`` fields
+# are resolved against the attached topology at config-build time: 0 is
+# always valid, -1 means the last port.
+FAULT_PRESETS = {
+    "degrade": (("degrade", 1.0e6, -1, 300.0, 8.0e6),),
+    "flaky": (("transient", 0.5e6, 0, 0.85, 6.0e6),),
+    "hot-remove": (("hot_remove", 1.5e6, -1),),
+    "mix": (("transient", 0.5e6, 0, 0.85, 6.0e6),
+            ("degrade", 1.0e6, -1, 300.0, 8.0e6),
+            ("hot_remove", 3.0e6, -1)),
+}
+
+
+def resolve_fault_preset(name: str, n_ports: int):
+    """Resolve a named preset's relative port indices for a topology."""
+    if name not in FAULT_PRESETS:
+        raise ValueError(f"unknown fault preset {name!r} "
+                         f"(choices: {sorted(FAULT_PRESETS)})")
+    events = []
+    for kind, t_ns, port, *rest in FAULT_PRESETS[name]:
+        port = port % n_ports if n_ports else port
+        if kind == "hot_remove" and n_ports < 2:
+            raise ValueError("the hot-remove presets need a multi-port "
+                             "tier (--cxl-topology with >= 2 ports): "
+                             "removing the only port leaves no tier")
+        events.append((kind, t_ns, port, *rest))
+    return tuple(events)
 
 
 def _print_closed(engine, finished, n_requests, dt):
@@ -104,6 +139,17 @@ def _print_tier(engine, config):
               f"({st['restore_inflight_ns'] / 1e3:.0f}us in flight), "
               f"peak {st['sched_inflight_peak']} in-flight tier ops, "
               f"{st['sim_time_ns'] / 1e6:.2f}ms simulated")
+    if config.tier_faults:
+        st = engine.stats
+        down = [p["port"] for p in tier.port_stats() if p["down"]]
+        print(f"[serve] faults (seed {config.fault_seed}): "
+              f"{st['tier_fault_ops']} ops crossed the fault path "
+              f"({st['tier_fault_retries']} retries, "
+              f"{st['tier_fault_failures']} exhausted the budget), "
+              f"{st['tier_lost_entries']} entries / "
+              f"{st['tier_lost_bytes'] / 1024:.0f} KiB lost to "
+              f"hot-removed ports {down or '[]'}, "
+              f"{st['recoveries']} requests recovered via RECOVERING")
     if tier.cfg.tagged:
         print(f"[serve] topology ({snap['placement']} placement, "
               f"{snap['promotions']} promotions / "
@@ -225,15 +271,33 @@ def main() -> None:
     ap.add_argument("--zipf-s", type=float, default=1.1,
                     help="zipf exponent for prompt popularity (prefix "
                          "reuse); larger = more skew")
+    ap.add_argument("--fault-trace", default="",
+                    choices=[""] + sorted(FAULT_PRESETS),
+                    help="inject a named endpoint-fault preset into the "
+                         "attached tier: degrade (one port at 300x media "
+                         "latency), flaky (transient-error window with "
+                         "bounded retries), hot-remove (a port dies "
+                         "mid-run; its pages are lost and recovered), or "
+                         "mix (all three)")
+    ap.add_argument("--fault-seed", type=int, default=_DEF.fault_seed,
+                    help="seed for the fault schedule's transient-error "
+                         "draws (deterministic per (seed, port, attempt))")
     args = ap.parse_args()
+    topology = tuple(m.strip() for m in
+                     args.cxl_topology.split(",") if m.strip())
+    tier_faults = ()
+    if args.fault_trace:
+        n_ports = len(topology) if topology else (1 if args.cxl_media
+                                                  else 0)
+        tier_faults = resolve_fault_preset(args.fault_trace, n_ports)
     config = ServeConfig(
         n_slots=args.slots, max_seq=args.max_seq,
         prefill_chunk=args.prefill_chunk, seed=args.seed,
         cxl_async=args.cxl_async, preempt_policy=args.preempt_policy,
         admit_mode=args.admit_mode, tier_media=args.cxl_media,
-        tier_topology=tuple(m.strip() for m in
-                            args.cxl_topology.split(",") if m.strip()),
-        tier_placement=args.cxl_placement, tier_sr=not args.cxl_sr_off)
+        tier_topology=topology,
+        tier_placement=args.cxl_placement, tier_sr=not args.cxl_sr_off,
+        tier_faults=tier_faults, fault_seed=args.fault_seed)
     load = None
     if args.load:
         from repro.serving.loadgen import LoadConfig

@@ -11,17 +11,25 @@ At thousand-node scale the framework assumes failures are routine:
    fleet: the fleet-relative slowdown of a worker maps to a DevLoad state
    and the same controller that throttles SR throttles the offending
    host's input prefetch depth / triggers its eviction, instead of letting
-   one slow HBM or NIC gate every all-reduce.
+   one slow HBM or NIC gate every all-reduce. :meth:`~StragglerMitigator.
+   assess_ports` applies the identical discipline to a CXL tier's root
+   ports (``CxlTier.port_stats()``): a hot-removed port is evicted, a
+   degraded or DevLoad-pressured port is throttled.
  * ``RestartPolicy`` — crash-consistent resume: (checkpoint step, data
    step, rng) define the restart point; elastic resize re-shards through
    Checkpointer.restore(shardings=new_mesh_shardings).
+
+Every wall-clock read goes through an injectable ``now`` callable
+(default ``time.time``): wiring ``lambda: engine.clock_ns / 1e9`` puts
+heartbeat liveness on the serving engine's simulated clock, which is
+what makes the fault-injection tests deterministic.
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.qos import DevLoad, QoSController
 
@@ -35,21 +43,30 @@ class HeartbeatRecord:
 
 
 class Heartbeat:
-    """Worker liveness + progress table."""
+    """Worker liveness + progress table.
 
-    def __init__(self, n_workers: int, *, dead_after_s: float = 60.0):
+    ``now`` injects the clock every default timestamp is read from
+    (seconds; default wall ``time.time``). Pass the serving engine's
+    simulated clock — ``lambda: engine.clock_ns / 1e9`` — and liveness
+    becomes a pure function of simulated time. Explicit ``now=`` args on
+    the methods still override per call.
+    """
+
+    def __init__(self, n_workers: int, *, dead_after_s: float = 60.0,
+                 now: Optional[Callable[[], float]] = None):
         self.n_workers = n_workers
         self.dead_after_s = dead_after_s
+        self.now = now if now is not None else time.time
         self.records: Dict[int, HeartbeatRecord] = {}
 
     def stamp(self, worker: int, step: int, step_time: float,
               now: Optional[float] = None) -> None:
         self.records[worker] = HeartbeatRecord(
-            worker, step, now if now is not None else time.time(),
+            worker, step, now if now is not None else self.now(),
             step_time)
 
     def dead_workers(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.time()
+        now = now if now is not None else self.now()
         out = [w for w in range(self.n_workers)
                if w not in self.records
                or now - self.records[w].t > self.dead_after_s]
@@ -83,6 +100,33 @@ class StragglerMitigator:
                 actions[w] = "throttle"
             else:
                 actions[w] = "ok"
+        return actions
+
+    def assess_ports(self, port_stats: List[Dict[str, object]]) \
+            -> Dict[int, str]:
+        """Map a CXL tier's per-port state onto the same action set.
+
+        Takes ``CxlTier.port_stats()`` rows and returns port -> action:
+        a hot-removed port is ``evict`` (its pages are already lost —
+        placement must never target it again), a port whose media is
+        degraded past ``evict_threshold`` or whose announced DevLoad is
+        at/above MODERATE is ``throttle`` (hotness placement demotes
+        away from it; the flusher narrows its admission window), and a
+        healthy port is ``ok`` — the fleet straggler discipline and the
+        endpoint fault discipline reduced to one policy.
+        """
+        actions: Dict[int, str] = {}
+        for row in port_stats:
+            port = int(row["port"])  # type: ignore[arg-type]
+            if row.get("down"):
+                actions[port] = "evict"
+            elif (float(row.get("degrade_mult", 1.0))  # type: ignore
+                  >= self.evict_threshold
+                  or int(row.get("devload", 0))  # type: ignore
+                  >= DevLoad.MODERATE):
+                actions[port] = "throttle"
+            else:
+                actions[port] = "ok"
         return actions
 
 

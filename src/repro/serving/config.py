@@ -24,6 +24,7 @@ from typing import Optional, Tuple
 _PREEMPT_POLICIES = ("none", "swap", "recompute")
 _ADMIT_MODES = ("continuous", "closed")
 _PLACEMENTS = ("striped", "hashed", "hotness")
+_FAULT_KINDS = ("degrade", "transient", "hot_remove")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +59,12 @@ class ServeConfig:
      * ``tier_placement`` / ``tier_sr`` — placement policy and the
        speculative-read engine.
      * ``tier_step_ns`` — simulated ns per engine tick.
+     * ``tier_faults`` — declarative fault events, stdlib tuples of
+       ``("degrade", t_ns, port, mult[, until_ns])``,
+       ``("transient", t_ns, port, p_err[, until_ns])`` or
+       ``("hot_remove", t_ns, port)``; :meth:`make_tier` folds them into
+       a deterministic ``repro.sim.engine.FaultSchedule`` seeded by
+       ``fault_seed``. Requires a tier attachment.
     """
 
     n_slots: int = 4
@@ -76,6 +83,8 @@ class ServeConfig:
     tier_placement: str = "striped"
     tier_sr: bool = True
     tier_step_ns: float = 100_000.0
+    tier_faults: Tuple[tuple, ...] = ()
+    fault_seed: int = 0
 
     def __post_init__(self):
         """Validate spellings and cross-field constraints once."""
@@ -107,6 +116,14 @@ class ServeConfig:
         if self.tier_step_ns <= 0:
             raise ValueError("tier_step_ns must be positive "
                              f"(got {self.tier_step_ns})")
+        if self.tier_faults:
+            if not self.has_tier:
+                raise ValueError("tier_faults without a tier attachment: "
+                                 "set tier_media or tier_topology")
+            for ev in self.tier_faults:
+                if not ev or ev[0] not in _FAULT_KINDS:
+                    raise ValueError(f"unknown fault event {ev!r} "
+                                     f"(kinds: {_FAULT_KINDS})")
 
     @classmethod
     def field_names(cls) -> Tuple[str, ...]:
@@ -129,9 +146,27 @@ class ServeConfig:
             return None
         from repro.core.tier import CxlTier, TierConfig
 
+        faults = self.make_fault_schedule()
         if self.tier_topology:
             return CxlTier(TierConfig(
                 topology=tuple(self.tier_topology),
-                placement=self.tier_placement, sr_enabled=self.tier_sr))
+                placement=self.tier_placement, sr_enabled=self.tier_sr,
+                faults=faults))
         return CxlTier(TierConfig(media=self.tier_media,
-                                  sr_enabled=self.tier_sr))
+                                  sr_enabled=self.tier_sr, faults=faults))
+
+    def make_fault_schedule(self):
+        """Fold ``tier_faults`` into a ``FaultSchedule`` (None if empty).
+
+        Lazy-imports ``repro.sim.engine`` for the same reason
+        :meth:`make_tier` is lazy; the event helpers re-validate the
+        numeric fields (times, ports, multipliers, probabilities).
+        """
+        if not self.tier_faults:
+            return None
+        from repro.sim.engine import (FaultSchedule, degrade, hot_remove,
+                                      transient)
+        mk = {"degrade": degrade, "transient": transient,
+              "hot_remove": hot_remove}
+        events = tuple(mk[ev[0]](*ev[1:]) for ev in self.tier_faults)
+        return FaultSchedule(events, seed=self.fault_seed)

@@ -102,6 +102,8 @@ class Request:
     restored: bool = False          # served via prefix restore (no prefill)
     restore_stall_ns: float = 0.0   # simulated CXL fetch stall (cold-tier
                                     # restore through the CxlTier, else 0)
+    recoveries: int = 0             # failed-fetch / page-loss re-queues
+                                    # (RECOVERING transitions survived)
     # SLO timestamps on the engine's simulated clock (``engine.clock_ns``,
     # tier_step_ns per working tick plus open-loop idle jumps): stamped at
     # submit / first sampled token / retirement, read back through the
@@ -181,6 +183,12 @@ class RequestHandle:
         """Simulated ns this request stalled on cold-tier fetches."""
         return self._req.restore_stall_ns
 
+    @property
+    def recoveries(self) -> int:
+        """RECOVERING re-queues this request survived (failed tier
+        fetches and pages lost to a hot-removed port; 0 without faults)."""
+        return self._req.recoveries
+
 
 # Families whose full per-request decode state lives in the paged "kv"
 # leaves — the only ones prefix restore can reconstruct a slot from.
@@ -248,6 +256,25 @@ class HostPageStore:
         if entry is not None:
             self.pages.move_to_end(rid)
         return entry
+
+    def drop(self, rid: int) -> bool:
+        """Remove ``rid`` outright, regardless of budget or recency.
+
+        The fault-recovery path uses this when the entry's tier copy was
+        lost (port hot-removed) or keeps failing its fetch: the next
+        lookup misses and the request prefills fresh. Fires ``on_evict``
+        with ``reason="evict"`` like an LRU eviction (so side indexes and
+        tier segments are released the same way); returns True iff the
+        rid was present.
+        """
+        old = self.pages.pop(rid, None)
+        if old is None:
+            return False
+        self.bytes -= self._entry_bytes(old)
+        self.evictions += 1
+        if self.on_evict is not None:
+            self.on_evict(rid, old, "evict")
+        return True
 
     def _evict(self) -> None:
         if self.budget_bytes is None:
@@ -919,9 +946,11 @@ class ServingEngine:
         self.stats["restore_overlap_ratio"] = max(
             0.0, 1.0 - ss["restore_exposed_ns"] / infl) if infl > 0 else 0.0
         self.stats["sched_inflight_peak"] = ss["inflight_peak"]
+        self.stats["recoveries"] = ss["recoveries"]
         if self.tier is None:
             return
         self.tier.advance(self.tier_step_ns)
+        self._fault_sweep()
         if self._async_writes:      # retire completed background flushes
             self._async_writes = [h for h in self._async_writes
                                   if not self.tier.poll(h)]
@@ -931,6 +960,40 @@ class ServingEngine:
         self.stats["tier_store_occupancy"] = self.tier.store_occupancy()
         self.stats["tier_ports"] = self.tier.port_stats()
         self.stats["flushes_deferred"] = self.flusher.deferred
+        tc = self.tier.counters
+        self.stats["tier_fault_ops"] = tc["fault_ops"]
+        self.stats["tier_lost_entries"] = tc["lost_entries"]
+        self.stats["tier_lost_bytes"] = tc["lost_bytes"]
+        self.stats["tier_fault_retries"] = sum(
+            p.fault_retries for p in self.tier.topo.ports)
+        self.stats["tier_fault_failures"] = sum(
+            p.fault_failures for p in self.tier.topo.ports)
+        self.stats["tier_ports_down"] = len(self.tier.topo.ports_down())
+
+    def _fault_sweep(self) -> None:
+        """Fold newly-fired tier faults into serving state.
+
+        ``tier.advance`` already invalidated every entry on a
+        hot-removed port; this drains the lost keys and repairs the
+        serving side: a lost store entry's host copy is dropped (the
+        next lookup misses and prefills fresh — the tier copy it would
+        restore from is gone), and a lost swap payload is downgraded to
+        a recompute marker (only the token stream survives; resume rides
+        the ``preempt_policy="recompute"`` re-prefill path). Runs after
+        every simulated-time advance and always before the next tick's
+        admissions, so a recovering request can never re-admit against a
+        dead copy.
+        """
+        if self.tier is None:
+            return
+        for key in self.tier.take_lost_keys():
+            if isinstance(key, tuple) and len(key) == 2 \
+                    and key[0] == "swap":
+                rid = key[1]
+                if rid in self.scheduler.swapped:
+                    self.scheduler.swapped[rid] = {"recompute": True}
+            else:
+                self.store.drop(key)
 
     def advance_time(self, dt_ns: float) -> None:
         """Jump the simulated clock across an idle window (no decode work).
@@ -946,6 +1009,7 @@ class ServingEngine:
         self.stats["clock_ns"] = self.clock_ns
         if self.tier is not None:
             self.tier.advance(float(dt_ns))
+            self._fault_sweep()
             if self._async_writes:
                 self._async_writes = [h for h in self._async_writes
                                       if not self.tier.poll(h)]
@@ -966,6 +1030,7 @@ class ServingEngine:
                 and ticks < guard_ticks:
             self.tier.advance(self.tier_step_ns)
             self.clock_ns += self.tier_step_ns
+            self._fault_sweep()
             self.scheduler.drain()
             if self._async_writes:
                 self._async_writes = [h for h in self._async_writes

@@ -218,6 +218,15 @@ def drive_open_loop(engine, trace: List[Arrival], *,
         else:
             break
     engine.run(max_ticks=0)           # drain async tier ops at the horizon
+    # Fault recovery during that drain can re-queue RECOVERING requests
+    # (a failed in-flight fetch has nowhere else to land at the horizon);
+    # keep ticking until they finish so page loss never strands work —
+    # bounded because each request force-prefills after a few failures.
+    extra = 0
+    while (engine.queue or any(s is not None for s in engine.slots)
+           or engine.scheduler.busy()) and extra < max_ticks:
+        engine.step()
+        extra += 1
     return handles, depths
 
 
@@ -265,4 +274,6 @@ def summarize(engine, handles, queue_depths, cfg: LoadConfig):
         sim_time_ms=round(engine.clock_ns / 1e6, 4),
         preemptions=engine.stats["preemptions"],
         prefix_hits=engine.stats["prefix_hits"],
+        recoveries=engine.stats["recoveries"],
+        lost_requests=len(handles) - len(done),
     )

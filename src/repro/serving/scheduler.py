@@ -17,6 +17,19 @@ time. This module rebuilds admission as an explicit state machine over
     RUNNING ──preempt, swap policy──────► SWAPPED ───► QUEUED (requeued)
     RUNNING ──preempt, recompute policy─► PREEMPTED ─► QUEUED (requeued)
     RUNNING ──max tokens / position bound───────────────────────► RETIRED
+    RESTORING ──fetch failed (transient budget / port hot-removed)─┐
+                                          RECOVERING ─► QUEUED ◄───┘
+
+Fault recovery (RECOVERING): a restore or swap-in whose tier fetch
+failed — the transient-retry budget ran out, or the entry's port was
+hot-removed mid-flight — re-queues the request instead of activating
+garbage. If the tier copy survived (transient exhaustion) the next
+admission simply retries the fetch; if the pages were lost the engine's
+lost-key sweep has already dropped the host-store copy or downgraded
+the swap payload to a recompute marker, so the retry falls through to a
+fresh prefill / the ``preempt_policy="recompute"`` resume path. After
+``RECOVERY_PREFILL_AFTER`` failed attempts the scheduler force-drops
+the surviving copy too (no livelock on a permanently flaky port).
 
 Two mechanisms hide the expansion tier's media latency behind decode:
 
@@ -56,9 +69,15 @@ RUNNING = "RUNNING"
 PREEMPTED = "PREEMPTED"
 SWAPPED = "SWAPPED"
 RETIRED = "RETIRED"
+RECOVERING = "RECOVERING"
 
 PREEMPT_POLICIES = ("none", "swap", "recompute")
 ADMIT_MODES = ("continuous", "closed")
+
+# After this many failed fetch attempts for one request, drop its
+# surviving tier/store copy and force a fresh prefill — bounds the
+# retry loop on a permanently flaky port (no livelock).
+RECOVERY_PREFILL_AFTER = 3
 
 
 @dataclasses.dataclass
@@ -70,6 +89,7 @@ class _InflightRestore:
     entry: dict
     handle: object                # repro.core.tier.TierHandle
     mode: str                     # "restore" | "swap"
+    key: object = None            # tier/store key (recovery bookkeeping)
 
 
 class RequestScheduler:
@@ -100,7 +120,8 @@ class RequestScheduler:
         self.stats = {"preemptions": 0, "swap_out_bytes": 0,
                       "swap_in_bytes": 0, "restore_inflight_ns": 0.0,
                       "restore_exposed_ns": 0.0, "inflight_peak": 0,
-                      "activations": 0, "blocked_ticks": 0}
+                      "activations": 0, "blocked_ticks": 0,
+                      "recoveries": 0}
 
     # ------------------------------------------------------------- tick
     def busy(self) -> bool:
@@ -136,6 +157,9 @@ class RequestScheduler:
             if not eng.tier.poll(rec.handle):
                 continue
             del self.inflight[slot]
+            if getattr(rec.handle, "failed", False):
+                self._recover_inflight(rec)
+                continue
             if rec.mode == "swap":
                 eng.slots[slot] = rec.req
                 eng._apply_swap_in(rec.req, slot, rec.entry)
@@ -146,6 +170,41 @@ class RequestScheduler:
                 eng._apply_restore(rec.req, slot, rec.entry)
             rec.req.state = RUNNING
             self.stats["activations"] += 1
+
+    # ---------------------------------------------------- fault recovery
+    def _recover_inflight(self, rec: _InflightRestore) -> None:
+        """An async fetch failed (retry budget exhausted or its port
+        hot-removed): re-queue the request in RECOVERING state instead
+        of activating a slot from pages that never arrived."""
+        eng = self.engine
+        req = rec.req
+        if rec.mode == "swap":
+            # put the payload back for the retry — unless the tier copy
+            # died with its port (or keeps failing), in which case only
+            # the token stream survives and resume goes through the
+            # recompute path.
+            if (eng.tier.has_entry(("swap", req.rid))
+                    and req.recoveries + 1 < RECOVERY_PREFILL_AFTER):
+                self.swapped[req.rid] = rec.entry
+            else:
+                eng.tier.free_entry(("swap", req.rid))
+                self.swapped[req.rid] = {"recompute": True}
+        elif rec.key is not None and (
+                not eng.tier.has_entry(rec.key)
+                or req.recoveries + 1 >= RECOVERY_PREFILL_AFTER):
+            # pages lost, or this key keeps failing: drop the host-store
+            # copy so the next admission prefills from scratch.
+            eng.store.drop(rec.key)
+        self._requeue_recovering(req)
+
+    def _requeue_recovering(self, req) -> None:
+        """Common tail of every recovery path: count it, mark the
+        request RECOVERING and push it back on the admission queue."""
+        req.slot = None
+        req.recoveries += 1
+        req.state = RECOVERING
+        self.engine.queue.append(req)
+        self.stats["recoveries"] += 1
 
     def _pop_next(self):
         """Highest-priority queued request, FIFO-stable on ties (so the
@@ -183,8 +242,8 @@ class RequestScheduler:
             return
         eng.slots[slot] = req
         if not eng.legacy and self._try_restore(req, slot):
-            eng.stats["prefix_hits"] += 1
-        elif eng.legacy:
+            pass          # prefix_hits counted inside (failed fetches
+        elif eng.legacy:  # recover into the queue, not into the stat)
             eng._prefill_slot_legacy(req, slot)
             req.state = RUNNING
         else:
@@ -219,15 +278,24 @@ class RequestScheduler:
                 self.stats["restore_inflight_ns"] += handle.in_flight_ns
                 eng.slots[slot] = None          # reserved, not active
                 self.inflight[slot] = _InflightRestore(
-                    req, slot, entry, handle, "restore")
+                    req, slot, entry, handle, "restore", key)
                 req.state = RESTORING
                 self._note_inflight_peak()
+                eng.stats["prefix_hits"] += 1
                 return True
             stall = eng.tier.read_entry(key, nbytes)
             req.restore_stall_ns = stall
             eng.stats["restore_stall_ns"] += stall
+            if eng.tier.last_entry_failed:
+                eng.slots[slot] = None
+                if (not eng.tier.has_entry(key)
+                        or req.recoveries + 1 >= RECOVERY_PREFILL_AFTER):
+                    eng.store.drop(key)
+                self._requeue_recovering(req)
+                return True
         eng._apply_restore(req, slot, entry)
         req.state = RUNNING
+        eng.stats["prefix_hits"] += 1
         return True
 
     # -------------------------------------------------------- preemption
@@ -296,13 +364,22 @@ class RequestScheduler:
                 self.stats["restore_exposed_ns"] += handle.issue_wait_ns
                 self.stats["restore_inflight_ns"] += handle.in_flight_ns
                 self.inflight[slot] = _InflightRestore(
-                    req, slot, entry, handle, "swap")
+                    req, slot, entry, handle, "swap", ("swap", req.rid))
                 req.state = RESTORING
                 self._note_inflight_peak()
                 return
             stall = eng.tier.read_entry(("swap", req.rid), nbytes)
             req.restore_stall_ns += stall
             eng.stats["restore_stall_ns"] += stall
+            if eng.tier.last_entry_failed:
+                if eng.tier.has_entry(("swap", req.rid)) and \
+                        req.recoveries + 1 < RECOVERY_PREFILL_AFTER:
+                    self.swapped[req.rid] = entry   # retry the swap-in
+                else:
+                    eng.tier.free_entry(("swap", req.rid))
+                    self.swapped[req.rid] = {"recompute": True}
+                self._requeue_recovering(req)
+                return
             eng.tier.free_entry(("swap", req.rid))  # pages back in GPU
         eng.slots[slot] = req
         eng._apply_swap_in(req, slot, entry)

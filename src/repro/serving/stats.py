@@ -127,6 +127,18 @@ class EngineStats(_StatsMapping):
     restore_overlap_ratio: float = 0.0
     sched_inflight_ops: int = 0
     sched_inflight_peak: int = 0
+    # fault injection + recovery (all zero without a FaultSchedule on
+    # the tier): page ops that needed transient retries / exhausted the
+    # retry budget, entries+bytes lost to hot-removed ports, ports
+    # currently down, and requests re-queued through the RECOVERING
+    # state after a failed fetch or page loss.
+    tier_fault_ops: int = 0
+    tier_fault_retries: int = 0
+    tier_fault_failures: int = 0
+    tier_lost_entries: int = 0
+    tier_lost_bytes: int = 0
+    tier_ports_down: int = 0
+    recoveries: int = 0
     # clocks: the tier topology's simulated time at the last tick, and
     # the engine's own tick clock (tier_step_ns per working tick plus
     # open-loop idle jumps — requests per simulated second and every SLO
@@ -172,3 +184,8 @@ class LoadMetrics(_StatsMapping):
     sim_time_ms: float = 0.0             # engine clock span of the run
     preemptions: int = 0
     prefix_hits: int = 0
+    # fault axis: RECOVERING re-queues the run absorbed, and requests
+    # that never completed (the zero-lost-requests gate's numerator —
+    # arrivals minus completions after the horizon drain).
+    recoveries: int = 0
+    lost_requests: int = 0

@@ -21,6 +21,7 @@ the paper's cache hierarchy does (compute-intensive workloads mostly hit).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import heapq
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
@@ -276,7 +277,156 @@ PAGE_PREFETCH = 3     # MemSpecRd stream for an upcoming restore
 PAGE_READ_ASYNC = 4   # non-blocking demand read (charged = issue wait only)
 PAGE_WRITE_ASYNC = 5  # non-blocking writeback (charged = issue wait only)
 
+# fault-annotated variants: same timing discipline as their base kind but
+# the op crossed the fault path (retried under a transient window, or hit
+# a downed port). Replaying them requires the recording run's
+# FaultSchedule — PageStream.op refuses them without one, and the
+# closed-form engine (sim.vector.page_trace_closed_form) rejects them
+# outright, exactly like the async kinds.
+PAGE_READ_FAULT = 6         # blocking read that crossed the fault path
+PAGE_WRITE_FAULT = 7        # blocking write that crossed the fault path
+PAGE_READ_ASYNC_FAULT = 8   # non-blocking read, fault-annotated
+PAGE_WRITE_ASYNC_FAULT = 9  # non-blocking write, fault-annotated
+
+PAGE_FAULT_KINDS = (PAGE_READ_FAULT, PAGE_WRITE_FAULT,
+                    PAGE_READ_ASYNC_FAULT, PAGE_WRITE_ASYNC_FAULT)
+# fault kind -> the base kind whose timing discipline it replays with
+_FAULT_BASE_KIND = {PAGE_READ_FAULT: PAGE_READ,
+                    PAGE_WRITE_FAULT: PAGE_WRITE,
+                    PAGE_READ_ASYNC_FAULT: PAGE_READ_ASYNC,
+                    PAGE_WRITE_ASYNC_FAULT: PAGE_WRITE_ASYNC}
+
 MAX_INFLIGHT_OPS = 4  # default per-port cap on outstanding async page ops
+
+MAX_OP_RETRIES = 4         # bounded retry budget per page op (no livelock)
+RETRY_BACKOFF_NS = 2_000.0  # first retry backoff; doubles per retry
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled endpoint fault, keyed to simulated ns.
+
+    ``kind`` is ``"degrade"`` (media service time multiplied by ``mult``
+    while the window ``[t_ns, until_ns)`` is active), ``"transient"``
+    (each CXL.mem page-op attempt on the port fails with probability
+    ``p_err`` inside the window, charged a bounded retry-with-backoff) or
+    ``"hot_remove"`` (the port is down from ``t_ns`` on — permanent;
+    ``until_ns`` is ignored). Use the :func:`degrade` / :func:`transient`
+    / :func:`hot_remove` helpers rather than building events by hand.
+    """
+
+    t_ns: float
+    port: int
+    kind: str
+    mult: float = 1.0
+    p_err: float = 0.0
+    until_ns: float = float("inf")
+
+
+def degrade(t_ns: float, port: int, mult: float,
+            until_ns: float = float("inf")) -> FaultEvent:
+    """A latency-spike window: ``port``'s media service time is scaled by
+    ``mult`` while ``t_ns <= now < until_ns``."""
+    if mult <= 0:
+        raise ValueError(f"degrade mult must be > 0 (got {mult})")
+    return FaultEvent(t_ns=float(t_ns), port=int(port), kind="degrade",
+                      mult=float(mult), until_ns=float(until_ns))
+
+
+def transient(t_ns: float, port: int, p_err: float,
+              until_ns: float = float("inf")) -> FaultEvent:
+    """A transient-error window: page-op attempts on ``port`` fail with
+    probability ``p_err`` while ``t_ns <= now < until_ns`` (decided by a
+    seeded hash, so live runs and oracle replays agree exactly)."""
+    if not 0.0 <= p_err <= 1.0:
+        raise ValueError(f"transient p_err must be in [0, 1] (got {p_err})")
+    return FaultEvent(t_ns=float(t_ns), port=int(port), kind="transient",
+                      p_err=float(p_err), until_ns=float(until_ns))
+
+
+def hot_remove(t_ns: float, port: int) -> FaultEvent:
+    """A permanent endpoint removal: ``port`` is down from ``t_ns`` on;
+    every page op on it fails instantly and costs nothing."""
+    return FaultEvent(t_ns=float(t_ns), port=int(port), kind="hot_remove")
+
+
+@dataclasses.dataclass(frozen=True)
+class PortFaultState:
+    """The folded fault state of one port at one instant of simulated
+    time: ``down`` (and since when), the product of active degrade
+    multipliers, and the max active transient error probability."""
+
+    down: bool = False
+    down_since: float = float("inf")
+    mult: float = 1.0
+    p_err: float = 0.0
+
+
+class FaultSchedule:
+    """A deterministic, replayable schedule of endpoint faults.
+
+    The schedule is pure: :meth:`state` is a function of (port, time)
+    alone and :meth:`op_fails` of (seed, port, attempt-ordinal) alone, so
+    a live tier run and a fresh :func:`replay_page_trace` of its recorded
+    trace — which walk identical op sequences on identical clocks — see
+    identical degrade windows, identical transient failures and identical
+    retry counts. That is what keeps the scalar oracle within 1% under
+    fault injection.
+    """
+
+    def __init__(self, events, seed: int = 0):
+        events = tuple(sorted(events, key=lambda e: e.t_ns))
+        for e in events:
+            if e.kind not in ("degrade", "transient", "hot_remove"):
+                raise ValueError(f"unknown fault kind {e.kind!r}")
+            if e.until_ns <= e.t_ns:
+                raise ValueError(f"empty fault window: {e.kind} on port "
+                                 f"{e.port} ends at {e.until_ns} ns but "
+                                 f"starts at {e.t_ns} ns")
+        self.events = events
+        self.seed = int(seed)
+
+    def ports(self):
+        """The sorted set of ports named by any event in the schedule."""
+        return sorted({e.port for e in self.events})
+
+    def state(self, port: int, t_ns: float) -> PortFaultState:
+        """Fold every event active on ``port`` at ``t_ns`` into one
+        :class:`PortFaultState` (pure; safe to call repeatedly)."""
+        down, down_since, mult, p_err = False, float("inf"), 1.0, 0.0
+        for e in self.events:
+            if e.port != port or t_ns < e.t_ns:
+                continue
+            if e.kind == "hot_remove":
+                down = True
+                down_since = min(down_since, e.t_ns)
+            elif t_ns < e.until_ns:
+                if e.kind == "degrade":
+                    mult *= e.mult
+                else:
+                    p_err = max(p_err, e.p_err)
+        return PortFaultState(down=down, down_since=down_since,
+                              mult=mult, p_err=p_err)
+
+    def ports_down(self, t_ns: float):
+        """Ports hot-removed at or before ``t_ns`` (sorted list)."""
+        return sorted({e.port for e in self.events
+                       if e.kind == "hot_remove" and e.t_ns <= t_ns})
+
+    def op_fails(self, port: int, attempt: int, p_err: float) -> bool:
+        """Deterministic transient-failure draw for one op attempt.
+
+        ``attempt`` is the port's monotone attempt ordinal (each service
+        attempt of each page op consumes one), so the draw sequence is
+        identical between a live run and its trace replay. The draw
+        hashes (seed, port, attempt) — not time — making it robust to
+        float jitter at window edges.
+        """
+        if p_err <= 0.0:
+            return False
+        h = hashlib.blake2b(f"{self.seed}:{port}:{attempt}".encode(),
+                            digest_size=8).digest()
+        return int.from_bytes(h, "big") / 2.0 ** 64 < p_err
 
 
 @dataclasses.dataclass
@@ -300,6 +450,8 @@ class OpHandle:
     start_ns: float
     done_ns: float
     wait_ns: float
+    retries: int = 0      # transient-error retries the op absorbed
+    failed: bool = False  # retry budget exhausted, or port hot-removed
 
     @property
     def in_flight_ns(self) -> float:
@@ -336,7 +488,8 @@ class PageStream:
     def __init__(self, media: str = "znand", *, sr: bool = True,
                  ds: bool = True, req_bytes: int = 256,
                  dram_cache_bytes: int = 8 << 20,
-                 max_inflight: int = MAX_INFLIGHT_OPS):
+                 max_inflight: int = MAX_INFLIGHT_OPS,
+                 faults: Optional[FaultSchedule] = None, port_id: int = 0):
         self.ep = Endpoint(resolve_media(media),
                            dram_cache_bytes=dram_cache_bytes)
         self.ctl = RootPortController(self.ep,
@@ -352,6 +505,25 @@ class PageStream:
         self.inflight: List[OpHandle] = []
         self.prefetch_pages = 0
         self.prefetch_halted = 0
+        # ---- fault injection (None = healthy port, zero overhead)
+        self.faults = faults
+        self.port_id = int(port_id)
+        self.down = False               # hot-removed (permanent)
+        self.down_since = float("inf")
+        self.fault_retries = 0          # transient retries absorbed
+        self.fault_failures = 0         # ops that exhausted the budget
+        self.fault_backoff_ns = 0.0     # total retry backoff charged
+        self.last_op_retries = 0        # annotation of the latest read/write
+        self.last_op_failed = False
+        self._base_media = self.ep.media
+        self._applied_mult = 1.0
+        self._attempts = 0              # monotone per-port attempt ordinal
+
+    @property
+    def degrade_mult(self) -> float:
+        """The degrade multiplier currently applied to the port's media
+        (1.0 = healthy; updated at fault-window boundaries)."""
+        return self._applied_mult
 
     def _service(self, kind: int, addr: int, nbytes: int,
                  start: float) -> float:
@@ -373,23 +545,92 @@ class PageStream:
             self.inflight = [h for h in self.inflight
                              if h.done_ns > self.now]
 
+    def _fault_state(self, t: float) -> Optional[PortFaultState]:
+        """Fold the schedule at ``t`` and apply its side effects: swap in
+        the degraded (scaled) media at window boundaries and latch
+        hot-removal — failing any in-flight op whose completion lies past
+        the removal instant. Pure in ``t``, so the live tier and the
+        trace replay (identical clocks) apply identical transitions."""
+        if self.faults is None:
+            return None
+        st = self.faults.state(self.port_id, t)
+        if st.down and not self.down:
+            self.down = True
+            self.down_since = st.down_since
+            for h in self.inflight:
+                if h.done_ns > st.down_since:
+                    h.failed = True
+        if st.mult != self._applied_mult:
+            self.ep.media = (self._base_media if st.mult == 1.0 else
+                             self._base_media.scaled(latency=st.mult))
+            self._applied_mult = st.mult
+        return st
+
+    def _service_faulted(self, kind: int, addr: int, nbytes: int,
+                         start: float,
+                         st: Optional[PortFaultState]):
+        """Fault-aware service: walk the op, retrying with exponential
+        backoff on transient failures. Returns ``(done_ns, retries,
+        failed)`` — ``failed`` set once the bounded retry budget
+        (:data:`MAX_OP_RETRIES`) is exhausted; the clock cost of the
+        failed attempts and their backoff is still charged (no free
+        failures, no livelock)."""
+        if st is None:
+            return self._service(kind, addr, nbytes, start), 0, False
+        t = start
+        retries = 0
+        while True:
+            self._attempts += 1
+            done = self._service(kind, addr, nbytes, t)
+            if not self.faults.op_fails(self.port_id, self._attempts,
+                                        st.p_err):
+                return done, retries, False
+            retries += 1
+            self.fault_retries += 1
+            if retries > MAX_OP_RETRIES:
+                self.fault_failures += 1
+                return done, retries, True
+            backoff = RETRY_BACKOFF_NS * (2.0 ** (retries - 1))
+            self.fault_backoff_ns += backoff
+            t = done + backoff
+
     def read(self, addr: int, nbytes: int) -> float:
-        """Demand-read a page span; returns the stall (ns) until it lands."""
+        """Demand-read a page span; returns the stall (ns) until it lands.
+
+        Under a :class:`FaultSchedule` the op may retry (transient
+        window) — ``last_op_retries`` / ``last_op_failed`` annotate the
+        outcome; on a hot-removed port it fails instantly at zero cost.
+        """
         start = max(self.now, self.busy_until)
-        t = self._service(PAGE_READ, addr, nbytes, start)
+        st = self._fault_state(start)
+        if self.down:
+            self.last_op_retries, self.last_op_failed = 0, True
+            return 0.0
+        t, retries, failed = self._service_faulted(PAGE_READ, addr, nbytes,
+                                                   start, st)
         lat = t - self.now
         self.now = t
         self.busy_until = t
+        self.last_op_retries, self.last_op_failed = retries, failed
         self._retire_completed()
         return lat
 
     def write(self, addr: int, nbytes: int) -> float:
-        """Write a page span; returns the time (ns) the writer is held."""
+        """Write a page span; returns the time (ns) the writer is held.
+
+        Fault semantics match :meth:`read` (retry under transient
+        windows, instant zero-cost failure on a downed port)."""
         start = max(self.now, self.busy_until)
-        t = self._service(PAGE_WRITE, addr, nbytes, start)
+        st = self._fault_state(start)
+        if self.down:
+            self.last_op_retries, self.last_op_failed = 0, True
+            return 0.0
+        t, retries, failed = self._service_faulted(PAGE_WRITE, addr, nbytes,
+                                                   start, st)
         lat = t - self.now
         self.now = t
         self.busy_until = t
+        self.last_op_retries, self.last_op_failed = retries, failed
         self._retire_completed()
         return lat
 
@@ -415,13 +656,21 @@ class PageStream:
             self.now += wait
             self._retire_completed()
         start = max(self.now, self.busy_until)
+        st = self._fault_state(start)
+        if self.down:
+            # downed port: the op completes immediately as a failure and
+            # never occupies a service slot (nothing left to service it)
+            return OpHandle(kind=kind, addr=addr, nbytes=nbytes, port=0,
+                            issued_ns=issued, start_ns=start,
+                            done_ns=self.now, wait_ns=wait, failed=True)
         base = PAGE_READ if kind in (PAGE_READ, PAGE_READ_ASYNC) \
             else PAGE_WRITE
-        done = self._service(base, addr, nbytes, start)
+        done, retries, failed = self._service_faulted(base, addr, nbytes,
+                                                      start, st)
         self.busy_until = done
         handle = OpHandle(kind=kind, addr=addr, nbytes=nbytes, port=0,
                           issued_ns=issued, start_ns=start, done_ns=done,
-                          wait_ns=wait)
+                          wait_ns=wait, retries=retries, failed=failed)
         self.inflight.append(handle)
         return handle
 
@@ -441,7 +690,7 @@ class PageStream:
 
     def prefetch(self, addr: int, nbytes: int) -> float:
         """Issue the MemSpecRd stream for a span; free on the demand path."""
-        if self.ctl.sr_mode == "off" or self.ep.is_dram:
+        if self.down or self.ctl.sr_mode == "off" or self.ep.is_dram:
             return 0.0
         if self.ctl.qos.sr_halted:
             self.prefetch_halted += 1
@@ -458,6 +707,9 @@ class PageStream:
         flits -> no telemetry), deadlocking the divert discipline."""
         self.now += dt_ns
         self._retire_completed()
+        self._fault_state(self.now)
+        if self.down:
+            return 0.0
         self.ctl.qos.update(self.ep.devload(self.now))
         self.ctl.background_flush(self.now)
         return 0.0
@@ -469,6 +721,16 @@ class PageStream:
         in-flight-cap stall charged at issue, exactly what the online
         accounting recorded; the op's media work lands on the service
         cursor as it did live."""
+        if kind in PAGE_FAULT_KINDS:
+            # fault-annotated records carry the fault path's timing —
+            # retries, backoff, or a downed port's zero-cost failure —
+            # which only the recording run's schedule can reproduce
+            if self.faults is None:
+                raise ValueError(
+                    f"fault-annotated page-op kind {kind} cannot replay "
+                    "without the recording run's FaultSchedule; pass "
+                    "faults= to replay_page_trace / PageStream")
+            kind = _FAULT_BASE_KIND[kind]
         if kind == PAGE_READ:
             return self.read(addr, nbytes)
         if kind == PAGE_WRITE:
@@ -511,13 +773,16 @@ class Topology:
 
     def __init__(self, medias, *, sr: bool = True, ds: bool = True,
                  req_bytes: int = 256, dram_cache_bytes: int = 8 << 20,
-                 max_inflight: int = MAX_INFLIGHT_OPS):
+                 max_inflight: int = MAX_INFLIGHT_OPS,
+                 faults: Optional[FaultSchedule] = None):
         if not medias:
             raise ValueError("a Topology needs at least one port")
+        self.faults = faults
         self.ports = [PageStream(m, sr=sr, ds=ds, req_bytes=req_bytes,
                                  dram_cache_bytes=dram_cache_bytes,
-                                 max_inflight=max_inflight)
-                      for m in medias]
+                                 max_inflight=max_inflight,
+                                 faults=faults, port_id=i)
+                      for i, m in enumerate(medias)]
 
     @property
     def n_ports(self) -> int:
@@ -548,6 +813,10 @@ class Topology:
         for p in self.ports:
             p.advance(dt_ns)
         return 0.0
+
+    def ports_down(self):
+        """Ports whose endpoints are hot-removed so far (sorted list)."""
+        return sorted(i for i, p in enumerate(self.ports) if p.down)
 
     def issue(self, port: int, kind: int, addr: int,
               nbytes: int) -> OpHandle:
@@ -583,7 +852,8 @@ def replay_page_trace(ops, *, media: str = "znand", sr: bool = True,
                       ds: bool = True, req_bytes: int = 256,
                       dram_cache_bytes: int = 8 << 20,
                       max_inflight: int = MAX_INFLIGHT_OPS,
-                      topology=None) -> np.ndarray:
+                      topology=None,
+                      faults: Optional[FaultSchedule] = None) -> np.ndarray:
     """Scalar-oracle replay of a recorded page trace.
 
     ``ops`` is the ``CxlTier.ops`` recording: ``(kind, addr, nbytes)``
@@ -595,15 +865,20 @@ def replay_page_trace(ops, *, media: str = "znand", sr: bool = True,
     accounting. Async op kinds replay too: the interleaved PAGE_ADVANCE
     records carry the simulated time that let them complete, so a replay
     reproduces issue stalls (``max_inflight`` must match the recording
-    tier's cap) and service-cursor queueing exactly.
+    tier's cap) and service-cursor queueing exactly. Fault-annotated
+    traces (kinds in :data:`PAGE_FAULT_KINDS`) additionally need the
+    recording run's ``faults`` schedule — with it the replay reproduces
+    every degrade window, transient retry and hot-removal at identical
+    simulated instants; without it the replay raises rather than
+    silently mis-charging.
     """
     if topology is not None:
         topo = Topology(topology, sr=sr, ds=ds, req_bytes=req_bytes,
                         dram_cache_bytes=dram_cache_bytes,
-                        max_inflight=max_inflight)
+                        max_inflight=max_inflight, faults=faults)
         return np.asarray([topo.op(p, k, a, n) for p, k, a, n in ops],
                           np.float64)
     stream = PageStream(media, sr=sr, ds=ds, req_bytes=req_bytes,
                         dram_cache_bytes=dram_cache_bytes,
-                        max_inflight=max_inflight)
+                        max_inflight=max_inflight, faults=faults)
     return np.asarray([stream.op(k, a, n) for k, a, n in ops], np.float64)

@@ -1138,6 +1138,20 @@ def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
         raise ValueError("closed form covers blocking page traces only; "
                          "async op kinds need the event-loop oracle "
                          "(replay_page_trace)")
+    if np.any(np.isin(kinds, se.PAGE_FAULT_KINDS)):
+        # fault-annotated ops price retry/backoff (and downed-port zero
+        # charges) off the recording run's FaultSchedule — event-loop
+        # state again, not per-op algebra
+        raise ValueError("closed form cannot price fault-annotated page "
+                         "ops; replay them with replay_page_trace(..., "
+                         "faults=<the recording run's FaultSchedule>)")
+    known = np.isin(kinds, (se.PAGE_ADVANCE, se.PAGE_READ, se.PAGE_WRITE,
+                            se.PAGE_PREFETCH))
+    if not np.all(known):
+        bad = sorted(set(kinds[~known].tolist()))
+        raise ValueError(f"unknown page-op kind(s) {bad} in trace; known "
+                         "blocking kinds are PAGE_ADVANCE/PAGE_READ/"
+                         "PAGE_WRITE/PAGE_PREFETCH")
     nbytes = np.asarray([n for _, _, n in rest], np.int64)
     n_reqs = -(-nbytes // req_bytes)
     line = 64                      # CXL.mem request granularity (MemRd)

@@ -1,0 +1,380 @@
+"""Fault injection through the stack: deterministic ``FaultSchedule``
+semantics in the simulator, page-loss/invalidation behavior in the tier,
+allocator invariants under fault churn (hypothesis), and the serving
+engine's RECOVERING lifecycle under an open-loop trace — ending every
+scenario with the same differential gate the benches use: the recorded
+(fault-annotated) page trace must replay against the scalar oracle.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tier import CxlTier, TierConfig
+from repro.runtime.fault_tolerance import Heartbeat, StragglerMitigator
+from repro.sim.engine import (MAX_OP_RETRIES, PAGE_FAULT_KINDS,
+                              FaultSchedule, degrade, hot_remove,
+                              replay_page_trace, transient)
+
+ENTRY = 32 << 10
+
+
+def _replay(tier: CxlTier) -> np.ndarray:
+    return replay_page_trace(
+        tier.ops, media=tier.cfg.media_name,
+        topology=tier.cfg.port_medias if tier.cfg.tagged else None,
+        sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
+        req_bytes=tier.cfg.req_bytes,
+        dram_cache_bytes=tier.cfg.dram_cache_bytes,
+        max_inflight=tier.cfg.max_inflight, faults=tier.cfg.faults)
+
+
+# ------------------------------------------------------- FaultSchedule
+
+def test_fault_schedule_state_is_pure_and_windowed():
+    """state(port, t) is a pure fold over the event list: repeated
+    queries agree, windows open/close at their boundaries, hot-remove
+    latches forever."""
+    fs = FaultSchedule((degrade(1_000.0, 0, 4.0, 5_000.0),
+                        transient(2_000.0, 0, 0.5, 6_000.0),
+                        hot_remove(7_000.0, 1)))
+    for _ in range(2):                 # idempotent re-query
+        assert fs.state(0, 0.0).mult == 1.0
+        assert fs.state(0, 1_000.0).mult == 4.0
+        assert fs.state(0, 4_999.0).mult == 4.0
+        assert fs.state(0, 5_000.0).mult == 1.0
+        assert fs.state(0, 2_500.0).p_err == 0.5
+        assert fs.state(0, 6_000.0).p_err == 0.0
+        assert not fs.state(1, 6_999.0).down
+        assert fs.state(1, 7_000.0).down
+        assert fs.state(1, 1e12).down          # latched for good
+        assert not fs.state(0, 1e12).down      # other port unaffected
+    assert list(fs.ports_down(8_000.0)) == [1]
+    assert list(fs.ports_down(0.0)) == []
+
+
+def test_fault_schedule_op_fails_deterministic():
+    """Failure draws hash (seed, port, attempt) — identical across runs
+    (the property the replay oracle rests on), extreme probabilities are
+    exact, and the seed actually matters."""
+    fs = FaultSchedule((), seed=3)
+    draws = [fs.op_fails(0, a, 0.5) for a in range(64)]
+    assert draws == [fs.op_fails(0, a, 0.5) for a in range(64)]
+    assert all(not fs.op_fails(0, a, 0.0) for a in range(64))
+    assert all(fs.op_fails(0, a, 1.0) for a in range(64))
+    other = FaultSchedule((), seed=4)
+    assert draws != [other.op_fails(0, a, 0.5) for a in range(64)]
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        degrade(0.0, 0, 0.0)               # mult must be positive
+    with pytest.raises(ValueError):
+        transient(0.0, 0, 1.5)             # p_err is a probability
+    with pytest.raises(ValueError):
+        FaultSchedule((degrade(5.0, 0, 2.0, 1.0),))  # empty window
+
+
+# ------------------------------------------------- simulator semantics
+
+def test_degrade_window_scales_service_and_recovers():
+    """Inside the window reads cost ~mult x the healthy latency; after
+    it closes the port serves at base speed again — and the recorded
+    trace replays exactly."""
+    fs = FaultSchedule((degrade(1e6, 0, 8.0, 2e6),))
+    tier = CxlTier(TierConfig(topology=("dram",), sr_enabled=False,
+                              faults=fs))
+    tier.write_entry("a", ENTRY)
+    healthy = tier.read_entry("a", ENTRY)
+    tier.advance(1e6 - tier.topo.now + 10.0)   # into the window
+    slow = tier.read_entry("a", ENTRY)
+    tier.advance(2e6 - tier.topo.now + 10.0)   # past it
+    recovered = tier.read_entry("a", ENTRY)
+    # only the media component scales (link/controller costs don't), so
+    # the end-to-end factor is below mult but still well above healthy
+    assert slow > 2.0 * healthy
+    assert recovered == pytest.approx(healthy, rel=0.01)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
+
+
+def test_transient_retries_bounded_and_replay_exact():
+    """p_err=1.0 exhausts the retry budget on every op: retries stay at
+    MAX_OP_RETRIES per op (no livelock), failures are counted, backoff
+    is charged — and the fault-annotated trace still replays exactly."""
+    fs = FaultSchedule((transient(0.0, 0, 1.0),), seed=1)
+    tier = CxlTier(TierConfig(topology=("ssd-fast",), sr_enabled=False,
+                              faults=fs))
+    for i in range(3):
+        tier.write_entry(i, ENTRY)
+        tier.read_entry(i, ENTRY)
+        assert tier.last_entry_failed
+    ps = tier.topo.ports[0]
+    n_ops = tier.counters["fault_ops"]
+    assert n_ops == 6
+    assert ps.fault_failures == 6
+    # a failed op charges MAX_OP_RETRIES backoff retries plus the final
+    # budget-exhausting attempt
+    assert ps.fault_retries == 6 * (MAX_OP_RETRIES + 1)
+    assert ps.fault_backoff_ns > 0
+    assert any(op[1] in PAGE_FAULT_KINDS for op in tier.ops)  # tagged ops
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
+
+
+def test_hot_removed_port_ops_cost_nothing():
+    """After removal every op on the port fails instantly at zero cost:
+    the clock and the media cursor stop moving."""
+    fs = FaultSchedule((hot_remove(1e6, 0),))
+    tier = CxlTier(TierConfig(topology=("ssd-fast",), sr_enabled=False,
+                              faults=fs))
+    tier.write_entry("a", ENTRY)
+    tier.advance(2e6)
+    assert tier.poll_faults() == []            # already swept by advance
+    assert tier.topo.ports_down() == [0]
+    before = tier.topo.ports[0].now
+    with pytest.raises(RuntimeError, match="hot-removed"):
+        tier.write_entry("b", ENTRY)           # nowhere left to place
+    assert tier.topo.ports[0].now == before
+
+
+# ------------------------------------------------------ tier page loss
+
+def test_hot_remove_invalidates_and_restripes():
+    """Removal tears every entry with a segment on the dead port, the
+    tier reports the lost keys once, and new placements stripe around
+    the dead port — with the whole trace replaying exactly."""
+    fs = FaultSchedule((hot_remove(1e6, 1),))
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast", "ssd-slow"),
+                              placement="striped", faults=fs))
+    for i in range(6):
+        tier.write_entry(i, ENTRY)
+    assert any(p == 1 for segs in tier._segments.values()
+               for p, _, _ in segs)
+    tier.advance(2e6)
+    lost = tier.take_lost_keys()
+    assert lost and set(lost) <= set(range(6))
+    assert tier.counters["lost_entries"] == len(lost)
+    assert tier.counters["lost_bytes"] > 0
+    assert tier.take_lost_keys() == []          # reported exactly once
+    for key in lost:
+        assert not tier.has_entry(key)
+        assert tier.free_entry(key) == 0        # counted no-op, no raise
+    assert tier.counters["noop_frees"] >= len(lost)
+    for i in range(6, 12):                      # re-stripe around port 1
+        tier.write_entry(i, ENTRY)
+        assert all(p != 1 for p, _, _ in tier._segments[i])
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
+
+
+def test_hotness_demotes_away_from_degraded_port():
+    """When the fast port's effective read latency (base x degrade mult)
+    falls behind another port, hotness placement demotes its residents
+    (DRAM needs > ~164x to lose to znand-backed ssd-fast)."""
+    fs = FaultSchedule((degrade(1e6, 0, 400.0),))
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast"),
+                              placement="hotness", faults=fs))
+    for i in range(3):
+        tier.write_entry(i, ENTRY)
+        for _ in range(3):                      # heat them onto the DRAM
+            tier.read_entry(i, ENTRY)
+    assert tier._fast_port == 0
+    promoted = tier.counters["promotions"]
+    tier.advance(2e6)
+    assert tier._fast_port == 1
+    assert tier.counters["demotions"] >= min(promoted, 1)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
+
+
+# ------------------------------------ allocator invariants (hypothesis)
+
+def _check_alloc_invariants(tier: CxlTier) -> None:
+    """No leak, no double-free, byte conservation, free/live disjoint."""
+    pg = tier.cfg.page_bytes
+    for p in range(len(tier.topo.ports)):
+        if p in tier._down_ports:
+            assert not tier._free[p] and tier._live_bytes[p] == 0
+            continue
+        free_bases = [b for bases in tier._free[p].values()
+                      for b in bases]
+        assert len(free_bases) == len(set(free_bases))
+        live = [(base, length) for segs in tier._segments.values()
+                for (pp, base, length) in segs if pp == p]
+        assert sum(length for _, length in live) == tier._live_bytes[p]
+        assert not ({b for b, _ in live} & set(free_bases))
+        for npg, bases in tier._free[p].items():
+            assert npg >= 1 and all(b % pg == 0 for b in bases)
+
+
+_ACTION = st.one_of(
+    st.tuples(st.just("write"), st.integers(0, 7),
+              st.sampled_from((100, 5_000, ENTRY))),
+    st.tuples(st.just("free"), st.integers(0, 7)),
+    st.tuples(st.just("free_unknown"), st.integers(100, 107)),
+    st.tuples(st.just("advance"), st.just(0)),
+)
+
+
+@given(st.lists(_ACTION, min_size=1, max_size=40))
+@settings(max_examples=25, deadline=None)
+def test_allocator_invariants_under_fault_churn(actions):
+    """Random alloc/free/re-flush/hot-remove interleavings never leak a
+    segment, never double-free a base, and keep per-port byte accounting
+    conserved — the ``free_entry`` hardening under fault churn."""
+    fs = FaultSchedule((hot_remove(5e5, 1),))
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast"),
+                              placement="striped", faults=fs))
+    for op, key, *rest in actions:
+        if op == "write":
+            tier.write_entry(key, rest[0])
+        elif op in ("free", "free_unknown"):
+            tier.free_entry(key)
+            tier.free_entry(key)        # double free: counted no-op
+        else:
+            tier.advance(3e5)           # eventually fires the hot-remove
+        _check_alloc_invariants(tier)
+    tier.advance(1e6)                   # force the removal if not yet
+    tier.take_lost_keys()
+    _check_alloc_invariants(tier)
+    before = tier.counters["noop_frees"]
+    assert tier.free_entry("never-written") == 0
+    assert tier.counters["noop_frees"] == before + 1
+
+
+# --------------------------------------------------- runtime satellites
+
+def test_heartbeat_injectable_clock_deterministic():
+    """Liveness on an injected clock is a pure function of simulated
+    time — the serving engine's clock_ns slots straight in."""
+    t = {"now": 0.0}
+    hb = Heartbeat(2, dead_after_s=10.0, now=lambda: t["now"])
+    hb.stamp(0, step=1, step_time=0.1)
+    hb.stamp(1, step=1, step_time=0.1)
+    assert hb.dead_workers() == []
+    t["now"] = 5.0
+    hb.stamp(0, step=2, step_time=0.1)
+    t["now"] = 12.0
+    assert hb.dead_workers() == [1]     # stamped at 0, now 12 > 10
+    t["now"] = 100.0
+    assert hb.dead_workers() == [0, 1]
+
+
+def test_straggler_mitigator_maps_port_states():
+    """Per-port tier DevLoad states fold into the same action set the
+    fleet straggler policy uses: down -> evict, degraded or pressured ->
+    throttle, healthy -> ok."""
+    sm = StragglerMitigator(evict_threshold=2.0)
+    rows = [
+        {"port": 0, "down": False, "degrade_mult": 1.0, "devload": 0},
+        {"port": 1, "down": True, "degrade_mult": 1.0, "devload": 0},
+        {"port": 2, "down": False, "degrade_mult": 300.0, "devload": 0},
+        {"port": 3, "down": False, "degrade_mult": 1.0, "devload": 2},
+    ]
+    assert sm.assess_ports(rows) == {0: "ok", 1: "evict", 2: "throttle",
+                                     3: "throttle"}
+
+
+def test_straggler_mitigator_on_live_tier_stats():
+    """assess_ports consumes real ``CxlTier.port_stats()`` rows."""
+    fs = FaultSchedule((hot_remove(1e6, 1),))
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast"), faults=fs))
+    tier.write_entry("a", ENTRY)
+    tier.advance(2e6)
+    actions = StragglerMitigator().assess_ports(tier.port_stats())
+    assert actions[1] == "evict" and actions[0] in ("ok", "throttle")
+
+
+# ------------------------------------------- serving engine recovery
+
+def _serve_engine(faults, *, n_slots=4, seed=0):
+    import jax
+
+    from repro.configs import registry
+    from repro.configs.base import MeshConfig, RunConfig, SHAPES
+    from repro.models import model as M
+    from repro.serving.config import ServeConfig
+    from repro.serving.engine import ServingEngine
+
+    cfg = registry.smoke("qwen3-1.7b")
+    rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                   mesh=MeshConfig())
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    sc = ServeConfig(n_slots=n_slots, max_seq=64, prefill_chunk=8,
+                     cxl_async=True, preempt_policy="recompute",
+                     tier_topology=("dram", "ssd-fast"),
+                     tier_faults=faults, fault_seed=seed)
+    return ServingEngine(params, cfg, rc, config=sc)
+
+
+def _drive(engine, n_arrivals=16):
+    from repro.serving import loadgen
+    from repro.serving.loadgen import LoadConfig
+
+    lc = LoadConfig(n_arrivals=n_arrivals, rate_rps=8000.0,
+                    arrival="bursty", n_prompts=8,
+                    prompt_len_choices=(8, 16), max_new_choices=(4, 8),
+                    seed=0)
+    trace = loadgen.make_trace(lc)
+    handles, depths = loadgen.drive_open_loop(engine, trace,
+                                              max_ticks=4000)
+    return loadgen.summarize(engine, handles, depths, lc), handles
+
+
+def test_serve_config_fault_validation():
+    from repro.serving.config import ServeConfig
+    with pytest.raises(ValueError, match="without a tier"):
+        ServeConfig(tier_faults=(("hot_remove", 1e6, 0),))
+    with pytest.raises(ValueError, match="unknown fault event"):
+        ServeConfig(tier_media="ssd-fast",
+                    tier_faults=(("meteor_strike", 1e6, 0),))
+    sc = ServeConfig(tier_topology=("dram", "ssd-fast"),
+                     tier_faults=(("degrade", 1e6, 0, 4.0),
+                                  ("transient", 0.0, 1, 0.5, 2e6),
+                                  ("hot_remove", 3e6, 1)), fault_seed=7)
+    fs = sc.make_fault_schedule()
+    assert fs is not None and fs.seed == 7 and len(fs.events) == 3
+    assert sc.make_tier().cfg.faults is fs.__class__(
+        fs.events, seed=7).__class__ or True  # tier carries a schedule
+    assert sc.make_tier().cfg.faults.events == fs.events
+
+
+def test_recovering_lifecycle_under_flaky_ports(mesh_ctx):
+    """A high-p_err transient window on both ports forces failed tier
+    reads mid-flight: requests pass through RECOVERING at least once and
+    every one of them still completes (bounded retries, no livelock)."""
+    eng = _serve_engine((("transient", 0.0, 0, 0.97, 4.0e6),
+                         ("transient", 0.0, 1, 0.97, 4.0e6)), seed=1)
+    metrics, handles = _drive(eng, n_arrivals=16)
+    assert metrics.completed == 16
+    assert metrics.lost_requests == 0
+    assert eng.stats["tier_fault_ops"] > 0
+    assert eng.stats["recoveries"] >= 1
+    assert metrics.recoveries == eng.stats["recoveries"]
+    # bounded: every fault op retries at most MAX_OP_RETRIES+1 times
+    assert eng.stats["tier_fault_retries"] <= \
+        eng.stats["tier_fault_ops"] * (MAX_OP_RETRIES + 1)
+    assert all(h.done for h in handles)
+
+
+def test_hot_remove_mid_decode_loses_no_requests(mesh_ctx):
+    """Hot-removing a port mid-trace tears tier entries but the engine
+    recovers every affected request: zero lost, and the fault-annotated
+    page trace still replays against the scalar oracle."""
+    from repro.sim.engine import replay_page_trace
+    eng = _serve_engine((("hot_remove", 1.5e6, 1),), seed=0)
+    metrics, handles = _drive(eng, n_arrivals=16)
+    assert metrics.completed == 16
+    assert metrics.lost_requests == 0
+    assert eng.stats["tier_ports_down"] == 1
+    tier = eng.tier
+    np.testing.assert_allclose(
+        np.asarray(tier.op_ns),
+        replay_page_trace(tier.ops, media=tier.cfg.media_name,
+                          topology=tier.cfg.port_medias,
+                          sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
+                          req_bytes=tier.cfg.req_bytes,
+                          dram_cache_bytes=tier.cfg.dram_cache_bytes,
+                          max_inflight=tier.cfg.max_inflight,
+                          faults=tier.cfg.faults),
+        rtol=0.01)

@@ -179,3 +179,19 @@ def test_sweep_fanout_matches_inprocess():
     assert a.keys() == b.keys()
     for k in a:
         assert a[k]["exec_ns"] == pytest.approx(b[k]["exec_ns"], rel=1e-12)
+
+
+# ----------------------------------------------- oracle strictness
+
+def test_closed_form_rejects_fault_annotated_kinds():
+    """Fault-annotated ops price retries/backoff off the recording run's
+    FaultSchedule — event-loop state the per-op algebra cannot see, so
+    the closed form must refuse loudly rather than misprice silently."""
+    for kind in scalar_engine.PAGE_FAULT_KINDS:
+        with pytest.raises(ValueError, match="fault-annotated"):
+            vector.page_trace_closed_form([(kind, 0, 4096)], "dram")
+
+
+def test_closed_form_rejects_unknown_kinds():
+    with pytest.raises(ValueError, match="unknown page-op kind"):
+        vector.page_trace_closed_form([(42, 0, 4096)], "dram")

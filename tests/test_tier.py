@@ -29,7 +29,8 @@ def _replay(tier: CxlTier) -> np.ndarray:
     return replay_page_trace(tier.ops, media=tier.cfg.media_name,
                              sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
                              req_bytes=tier.cfg.req_bytes,
-                             dram_cache_bytes=tier.cfg.dram_cache_bytes)
+                             dram_cache_bytes=tier.cfg.dram_cache_bytes,
+                             faults=tier.cfg.faults)
 
 
 def _settle(eng, max_windows: int = 300) -> None:
@@ -196,3 +197,24 @@ def test_allocator_ranges_stable_and_page_aligned():
     assert a1 % tier.cfg.page_bytes == 0 and a1 >= 8192  # a got 2 pages
     tier.write_entry("a", 9000)                  # grown: relocates
     assert tier.ops[-1][1] != a0
+
+
+def test_fault_trace_replay_requires_schedule():
+    """A fault-annotated tier trace must not replay without the recording
+    run's FaultSchedule (the oracle would silently misprice retries);
+    with it, the replay is exact."""
+    from repro.sim.engine import FaultSchedule, transient
+
+    fs = FaultSchedule((transient(0.0, 0, 1.0),), seed=1)
+    tier = CxlTier(TierConfig(media="ssd-fast", sr_enabled=False,
+                              faults=fs))
+    tier.write_entry("a", ENTRY)
+    tier.read_entry("a", ENTRY)
+    assert tier.last_entry_failed
+    with pytest.raises(ValueError, match="FaultSchedule"):
+        replay_page_trace(tier.ops, media=tier.cfg.media_name,
+                          sr=False, ds=tier.cfg.ds_enabled,
+                          req_bytes=tier.cfg.req_bytes,
+                          dram_cache_bytes=tier.cfg.dram_cache_bytes)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), _replay(tier),
+                               rtol=0.01)
