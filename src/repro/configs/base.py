@@ -222,6 +222,8 @@ class RunConfig:
     # --- serving --------------------------------------------------------
     kv_page_size: int = 256
     decode_microbatch: int = 0  # 0 = whole batch
+    kv_quant: str = "none"      # none | int8 (per-page scales; fp8 reserved)
+                                # — see models/kv_quant.py
 
     # --- hillclimb knobs --------------------------------------------------
     seq_shard_attn: bool = False   # shard long-context KV over data axis

@@ -245,6 +245,8 @@ class CxlTier:
         self.trace_truncated = False     # ops past trace_cap went unrecorded
         self._port_stat_dicts: Optional[List[Dict[str, object]]] = None
         self.counters = {"reads": 0, "writes": 0, "prefetches": 0,
+                         "read_bytes": 0, "write_bytes": 0,
+                         "prefetch_bytes": 0,
                          "read_ns": 0.0, "write_ns": 0.0,
                          "async_reads": 0, "async_writes": 0,
                          "async_read_ns": 0.0, "async_write_ns": 0.0,
@@ -468,6 +470,7 @@ class CxlTier:
         for port, addr, n in self._place(key, nbytes):
             held = max(held, self._charge(port, PAGE_WRITE, addr, n))
         self.counters["writes"] += 1
+        self.counters["write_bytes"] += int(nbytes)
         self.counters["write_ns"] += held
         return held
 
@@ -485,6 +488,7 @@ class CxlTier:
         for port, addr, n in self._place(key, nbytes):
             stall = max(stall, self._charge(port, PAGE_READ, addr, n))
         self.counters["reads"] += 1
+        self.counters["read_bytes"] += int(nbytes)
         self.counters["read_ns"] += stall
         failed = self.last_entry_failed
         if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
@@ -501,6 +505,7 @@ class CxlTier:
         """
         handle = self._issue_entry(key, nbytes, PAGE_WRITE_ASYNC)
         self.counters["async_writes"] += 1
+        self.counters["write_bytes"] += int(nbytes)
         self.counters["async_write_ns"] += handle.in_flight_ns
         return handle
 
@@ -516,6 +521,7 @@ class CxlTier:
         """
         handle = self._issue_entry(key, nbytes, PAGE_READ_ASYNC)
         self.counters["async_reads"] += 1
+        self.counters["read_bytes"] += int(nbytes)
         self.counters["async_read_ns"] += handle.in_flight_ns
         if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
             self._heat[key] = self._heat.get(key, 0) + 1
@@ -595,6 +601,7 @@ class CxlTier:
         for port, addr, n in self._place(key, nbytes):
             self._charge(port, PAGE_PREFETCH, addr, n)
         self.counters["prefetches"] += 1
+        self.counters["prefetch_bytes"] += int(nbytes)
 
     def advance(self, dt_ns: float) -> None:
         """Idle engine-tick time (ns): the topology drains (barrier) and

@@ -24,9 +24,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
-                   acc_ref, m_ref, l_ref, *, page: int, n_pages: int,
-                   scale: float, logit_softcap: float):
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, *refs, page: int,
+                   n_pages: int, scale: float, logit_softcap: float,
+                   quant: bool = False):
+    if quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        o_ref, acc_ref, m_ref, l_ref = refs
     pj = pl.program_id(2)
 
     @pl.when(pj == 0)
@@ -43,6 +47,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0]                    # [G, D]
         k = k_ref[0, 0, 0]                 # [page, D]
         v = v_ref[0, 0, 0]                 # [page, D]
+        if quant:
+            # int8 pages: dequantize in-kernel with this page's fp32
+            # scale (scalar per (b, hkv, page)); math stays f32
+            k = k.astype(jnp.float32) * ks_ref[0, 0, 0]
+            v = v.astype(jnp.float32) * vs_ref[0, 0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # [G, page]
@@ -70,37 +79,55 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, kv_len: jnp.ndarray, *,
                        logit_softcap: float = 0.0,
-                       interpret: bool = False) -> jnp.ndarray:
+                       interpret: bool = False,
+                       k_scale: jnp.ndarray | None = None,
+                       v_scale: jnp.ndarray | None = None) -> jnp.ndarray:
     """q: [B, Hkv, G, D]; pages: [B, Hkv, P, page, D]; kv_len scalar int32.
 
-    Returns [B, Hkv, G, D] (f32 accumulation, q dtype out).
+    Quantized cache: pass int8 pages plus fp32 ``k_scale``/``v_scale``
+    [B, Hkv, P] (one symmetric scale per page per head); the kernel
+    dequantizes each page block in VMEM right after the DMA, so only the
+    int8 bytes cross the memory tiers. Returns [B, Hkv, G, D] (f32
+    accumulation, q dtype out).
     """
     b, hkv, g, d = q.shape
     n_pages, page = k_pages.shape[2], k_pages.shape[3]
     scale = 1.0 / (d ** 0.5)
     kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    quant = k_scale is not None
 
     grid = (b, hkv, n_pages)
     kernel = functools.partial(
         _decode_kernel, page=page, n_pages=n_pages, scale=scale,
-        logit_softcap=logit_softcap)
+        logit_softcap=logit_softcap, quant=quant)
 
     # pages already read are never refetched; the index map clamps
     # out-of-range pages to 0 (their body is skipped via kv_len)
     def page_map(bi, hi, pj, len_ref):
         return (bi, hi, pj, 0, 0)
 
+    def scale_map(bi, hi, pj, len_ref):
+        return (bi, hi, pj)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda bi, hi, pj, len_ref: (bi, hi, 0, 0)),
+        pl.BlockSpec((1, 1, 1, page, d), page_map),
+        pl.BlockSpec((1, 1, 1, page, d), page_map),
+    ]
+    operands = [kv_len, q, k_pages, v_pages]
+    if quant:
+        in_specs += [pl.BlockSpec((1, 1, 1), scale_map),
+                     pl.BlockSpec((1, 1, 1), scale_map)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, g, d),
-                             lambda bi, hi, pj, len_ref: (bi, hi, 0, 0)),
-                pl.BlockSpec((1, 1, 1, page, d), page_map),
-                pl.BlockSpec((1, 1, 1, page, d), page_map),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec(
                 (1, 1, g, d), lambda bi, hi, pj, len_ref: (bi, hi, 0, 0)),
             scratch_shapes=[
@@ -111,4 +138,4 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(kv_len, q, k_pages, v_pages)
+    )(*operands)

@@ -14,11 +14,14 @@ def _interpret() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("logit_softcap",))
-def decode(q, k_pages, v_pages, kv_len, *, logit_softcap: float = 0.0):
+def decode(q, k_pages, v_pages, kv_len, *, logit_softcap: float = 0.0,
+           k_scale=None, v_scale=None):
     """q: [B, 1, H, D]; pages: [B, P, page, Hkv, D]; kv_len scalar.
 
-    Returns [B, 1, H, D] — the local-shard result (combine across page
-    shards outside).
+    int8 pages take fp32 ``k_scale``/``v_scale`` [B, P, Hkv] (per-page,
+    per-head symmetric scales — models/kv_quant.py layout); the kernel
+    dequantizes in-VMEM. Returns [B, 1, H, D] — the local-shard result
+    (combine across page shards outside).
     """
     b, _, h, d = q.shape
     p, page, hkv = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
@@ -26,6 +29,8 @@ def decode(q, k_pages, v_pages, kv_len, *, logit_softcap: float = 0.0):
     qk = q.reshape(b, hkv, g, d)
     kp = jnp.moveaxis(k_pages, 3, 1)          # [B, Hkv, P, page, D]
     vp = jnp.moveaxis(v_pages, 3, 1)
+    ks = None if k_scale is None else jnp.moveaxis(k_scale, 2, 1)
+    vs = None if v_scale is None else jnp.moveaxis(v_scale, 2, 1)
     o = paged_flash_decode(qk, kp, vp, kv_len, logit_softcap=logit_softcap,
-                           interpret=_interpret())
+                           interpret=_interpret(), k_scale=ks, v_scale=vs)
     return o.reshape(b, 1, h, d)

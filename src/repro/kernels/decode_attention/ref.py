@@ -18,3 +18,18 @@ def paged_flash_decode_ref(q, k_pages, v_pages, kv_len):
     s = jnp.where(pos[None, None, None] < kv_len, s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhgk,bhkd->bhgd", w, v).astype(q.dtype)
+
+
+def paged_flash_decode_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                 kv_len):
+    """Dequantize-then-ref oracle for the int8 kernel path.
+
+    int8 pages [B, Hkv, P, page, D] + fp32 scales [B, Hkv, P]; the oracle
+    dequantizes in fp32 and runs the exact-softmax reference, so any
+    kernel/oracle mismatch is a kernel bug, not a quantization artifact.
+    """
+    k = k_pages.astype(jnp.float32) * k_scale.astype(
+        jnp.float32)[..., None, None]
+    v = v_pages.astype(jnp.float32) * v_scale.astype(
+        jnp.float32)[..., None, None]
+    return paged_flash_decode_ref(q, k, v, kv_len)

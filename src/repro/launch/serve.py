@@ -241,6 +241,12 @@ def main() -> None:
     ap.add_argument("--cxl-placement", default=_DEF.tier_placement,
                     choices=["striped", "hashed", "hotness"],
                     help="entry placement across the topology's ports")
+    ap.add_argument("--kv-quant", default=_DEF.kv_quant,
+                    choices=["none", "int8"],
+                    help="KV page format: int8 stores per-page-scaled "
+                         "int8 pages, halving every tier flush/restore/"
+                         "swap/SR byte charge (decode math stays full "
+                         "precision)")
     ap.add_argument("--cxl-async", action="store_true",
                     help="completion-based async tier I/O: restores no "
                          "longer stall the batch (the slot activates when "
@@ -293,6 +299,7 @@ def main() -> None:
     config = ServeConfig(
         n_slots=args.slots, max_seq=args.max_seq,
         prefill_chunk=args.prefill_chunk, seed=args.seed,
+        kv_quant=args.kv_quant,
         cxl_async=args.cxl_async, preempt_policy=args.preempt_policy,
         admit_mode=args.admit_mode, tier_media=args.cxl_media,
         tier_topology=topology,

@@ -262,7 +262,9 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                            batch_axes, page_axes,
                            kv_block: int = 2048,
                            logit_softcap: float = 0.0,
-                           force_shard_map: bool = False):
+                           force_shard_map: bool = False,
+                           k_scale: Optional[jnp.ndarray] = None,
+                           v_scale: Optional[jnp.ndarray] = None):
     """Distributed flash-decode over a page-sharded KV cache (shard_map).
 
     q: [B,1,H,D]; new_k/new_v: [B,1,Hkv,D]; pages: [B,P,page,Hkv,D] with
@@ -274,6 +276,13 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     cross-root-port read combine. Returns (o [B,1,H,D], k_pages',
     v_pages').
 
+    Quantized cache (``kv_quant="int8"``): pass int8 pages plus fp32
+    ``k_scale``/``v_scale`` [B,P,Hkv]. The pages are dequantized before
+    the write + flash-decode (decode math stays fp32) and requantized
+    with monotone per-page scale growth afterwards, so untouched pages
+    round-trip bit-exactly. Returns a 5-tuple (o, k_pages', v_pages',
+    k_scale', v_scale') in that case.
+
     ``force_shard_map`` disables the single-rank fast path so the
     shard_map body runs even on degenerate (size-1) axes — the two paths
     must be numerically identical, and the differential parity suite
@@ -281,6 +290,9 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     """
     from jax.sharding import PartitionSpec as P
 
+    from repro.models import kv_quant as kvq
+
+    quantized = k_scale is not None
     b, _, h, d = q.shape
     hkv = k_pages.shape[3]
     group = h // hkv
@@ -312,8 +324,12 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         hkv_ = k_pages.shape[3]
         smax = k_pages.shape[1] * k_pages.shape[2]
         pb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-        kf = k_pages.reshape(b, smax, hkv_, d)
-        vf = v_pages.reshape(b, smax, hkv_, d)
+        kd = (kvq.dequantize_pages(k_pages, k_scale) if quantized
+              else k_pages)
+        vd = (kvq.dequantize_pages(v_pages, v_scale) if quantized
+              else v_pages)
+        kf = kd.reshape(b, smax, hkv_, d)
+        vf = vd.reshape(b, smax, hkv_, d)
 
         def write(buf, new, p):
             return jax.lax.dynamic_update_slice(
@@ -325,13 +341,18 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                                           logit_softcap)
         out = (acc / jnp.maximum(l[..., None], 1e-30)).reshape(
             b, 1, hkv_ * group, d).astype(q.dtype)
+        if quantized:
+            kq, ks = kvq.requantize_pages(kf.reshape(kd.shape), k_scale)
+            vq, vs = kvq.requantize_pages(vf.reshape(vd.shape), v_scale)
+            return out, kq, vq, ks, vs
         return (out, kf.reshape(k_pages.shape), vf.reshape(v_pages.shape))
 
     q_spec = P(batch_axes, None, None, None)
     kv_spec = P(batch_axes, page_axes, None, None, None)
+    scale_spec = P(batch_axes, page_axes, None)       # [B, P, Hkv]
     pos_spec = P(batch_axes)                          # per-slot positions
 
-    def local(qb, kp, vp, nk, nv, p_):
+    def local(qb, kp, vp, nk, nv, p_, ks_, vs_):
         bl, pl, page, _, _ = kp.shape
         L = pl * page
         if page_axes:
@@ -344,8 +365,13 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         off = pb - start                              # [B]
         in_range = (off >= 0) & (off < L)
         offc = jnp.clip(off, 0, L - 1)
-        kf = kp.reshape(bl, L, hkv, d)
-        vf = vp.reshape(bl, L, hkv, d)
+        # quantized cache: dequantize the local pages before the write +
+        # flash-decode; scales are sharded exactly like the pages so each
+        # rank sees the scales of its own page shard
+        kdl = kvq.dequantize_pages(kp, ks_) if quantized else kp
+        vdl = kvq.dequantize_pages(vp, vs_) if quantized else vp
+        kf = kdl.reshape(bl, L, hkv, d)
+        vf = vdl.reshape(bl, L, hkv, d)
         # owner-only write at each slot's own offset (scatter: in-place)
         rows = jnp.arange(bl)
         old_k = kf[rows, offc]                        # [B, Hkv, D]
@@ -367,11 +393,23 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
             l_g, acc_g = l, acc
         out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
         out = out.reshape(bl, 1, hkv * group, d).astype(qb.dtype)
+        if quantized:
+            kq, ks2 = kvq.requantize_pages(kf.reshape(kdl.shape), ks_)
+            vq, vs2 = kvq.requantize_pages(vf.reshape(vdl.shape), vs_)
+            return out, kq, vq, ks2, vs2
         return out, kf.reshape(kp.shape), vf.reshape(vp.shape)
 
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    if quantized:
+        return jax.shard_map(
+            local,
+            in_specs=(q_spec, kv_spec, kv_spec, q_spec, q_spec, pos_spec,
+                      scale_spec, scale_spec),
+            out_specs=(q_spec, kv_spec, kv_spec, scale_spec, scale_spec))(
+                q, k_pages, v_pages, new_k, new_v, pos, k_scale, v_scale)
     return jax.shard_map(
-        local,
+        lambda qb, kp, vp, nk, nv, p_: local(qb, kp, vp, nk, nv, p_, None,
+                                             None),
         in_specs=(q_spec, kv_spec, kv_spec, q_spec, q_spec, pos_spec),
         out_specs=(q_spec, kv_spec, kv_spec))(
             q, k_pages, v_pages, new_k, new_v, pos)

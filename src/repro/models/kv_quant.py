@@ -1,0 +1,99 @@
+"""Int8 KV page quantization with per-(page, head) fp32 scales.
+
+Page layout (see docs/ARCHITECTURE.md "KV page format"): a quantized KV
+leaf keeps the same ``[..., n_pages, page, Hkv, D]`` geometry as the bf16
+cache but stores int8 codes, plus a sibling fp32 scale leaf shaped
+``[..., n_pages, Hkv]`` (one symmetric amax scale per page per KV head).
+Dequantization is ``x ~= q.astype(f32) * scale`` broadcast over the
+(page, D) axes; decode math stays bf16/fp32.
+
+Scales grow monotonically (``new = max(old, amax/127)``): a page that is
+dequantized and rewritten unchanged requantizes to the *bit-identical*
+int8 payload, because ``round(i * s / s') == i`` whenever ``s' >= s`` up
+to ~1 ulp (the rounding tolerance is 0.5/127, many orders of magnitude
+above float32 rounding error). This keeps tier flush -> restore -> decode
+round trips byte-exact for untouched pages.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# Supported ServeConfig/RunConfig kv_quant spellings. "fp8" is reserved
+# (validated, but not implemented yet).
+KV_QUANT_MODES: Tuple[str, ...] = ("none", "int8", "fp8")
+
+# Symmetric int8 code range: [-127, 127] (we never emit -128 so the grid
+# is symmetric and dequantization of -q equals -dequantization of q).
+QMAX = 127.0
+
+# amax floor: an all-zero (or subnormal) page still gets a strictly
+# positive, *normal* fp32 scale so dequantization never divides by zero
+# and never produces subnormal scales. 1e-20/127 ~= 7.9e-23 is normal.
+SCALE_FLOOR = 1e-20
+
+# Scale value used for freshly initialised (all-zero) cache pages.
+INIT_SCALE = SCALE_FLOOR / QMAX
+
+
+def validate_mode(mode: str) -> str:
+    """Validate a kv_quant mode string; returns it unchanged.
+
+    Raises ValueError for unknown spellings and for the reserved "fp8"
+    stub (page format + scales land here later; the knob is pinned now so
+    configs stay forward-compatible).
+    """
+    if mode not in KV_QUANT_MODES:
+        raise ValueError(
+            f"kv_quant={mode!r} unknown (expected one of {KV_QUANT_MODES})")
+    if mode == "fp8":
+        raise ValueError(
+            "kv_quant='fp8' is reserved but not implemented yet; "
+            "use 'none' or 'int8'")
+    return mode
+
+
+def page_scales(x: jnp.ndarray,
+                prev_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-(page, head) symmetric scales for ``x``: [..., P, page, Hkv, D].
+
+    Returns fp32 ``[..., P, Hkv]``. With ``prev_scale`` the result is the
+    elementwise maximum of old and new (monotone growth -- see module
+    docstring for why this keeps untouched pages bit-stable).
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-3, -1))
+    scale = jnp.maximum(amax, SCALE_FLOOR) / QMAX
+    if prev_scale is not None:
+        scale = jnp.maximum(scale, prev_scale.astype(jnp.float32))
+    return scale.astype(jnp.float32)
+
+
+def quantize_pages(x: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Quantize ``x`` [..., P, page, Hkv, D] to int8 with given scales.
+
+    ``scale`` is ``[..., P, Hkv]`` fp32 (from :func:`page_scales`). Codes
+    are round-to-nearest, clipped to the symmetric range [-127, 127].
+    """
+    inv = (1.0 / scale)[..., :, None, :, None]
+    q = jnp.round(x.astype(jnp.float32) * inv)
+    return jnp.clip(q, -QMAX, QMAX).astype(jnp.int8)
+
+
+def dequantize_pages(q: jnp.ndarray, scale: jnp.ndarray,
+                     dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize int8 pages ``q`` [..., P, page, Hkv, D] back to ``dtype``."""
+    x = q.astype(jnp.float32) * scale.astype(jnp.float32)[..., :, None, :,
+                                                          None]
+    return x.astype(dtype)
+
+
+def requantize_pages(x: jnp.ndarray, prev_scale: jnp.ndarray):
+    """Quantize updated pages with monotone scale growth.
+
+    Returns ``(q, scale)`` where ``scale = max(prev_scale, amax/127)``
+    per (page, head). Pages whose contents are unchanged since the last
+    quantization round-trip bit-exactly.
+    """
+    scale = page_scales(x, prev_scale)
+    return quantize_pages(x, scale), scale

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import speculative_read as sr
 from repro.models import attention as attn_lib
+from repro.models import kv_quant as kv_quant_lib
 from repro.models import mamba2, moe, transformer, xlstm
 from repro.models.layers import (embed_apply, embed_init, mlp_apply, pdtype,
                                  rmsnorm, rmsnorm_init, sinusoidal_positions,
@@ -232,21 +233,41 @@ def _chunked_xent(params, cfg, x, labels, n_chunks: int = 8):
 
 def cache_init(cfg: ModelConfig, rc: RunConfig, batch: int, max_seq: int,
                as_shape: bool = False) -> Dict:
-    """Paged cache pytree. as_shape=True -> ShapeDtypeStructs (dry-run)."""
+    """Paged cache pytree. as_shape=True -> ShapeDtypeStructs (dry-run).
+
+    With ``rc.kv_quant == "int8"`` the paged self-attention K/V leaves are
+    int8 and each gains a sibling fp32 per-(page, head) scale leaf
+    ("k_scale"/"v_scale", [n, B, n_pages, Hkv] — see models/kv_quant.py).
+    The vlm cross-attention K/V (written once at prefill, never behind the
+    tier hot path) stays at the model dtype.
+    """
     page = min(rc.kv_page_size, max_seq)
     n_pages = max(max_seq // page, 1)
     dt = pdtype(cfg)
+    quant = rc.kv_quant == "int8"
+    if rc.kv_quant != "none":
+        kv_quant_lib.validate_mode(rc.kv_quant)
 
-    def arr(shape, dtype):
+    def arr(shape, dtype, fill=None):
         if as_shape:
             return jax.ShapeDtypeStruct(shape, dtype)
+        if fill is not None:
+            return jnp.full(shape, fill, dtype)
         return jnp.zeros(shape, dtype)
 
     def kv(n):
-        return {"k": arr((n, batch, n_pages, page, cfg.n_kv_heads,
-                          cfg.head_dim), dt),
-                "v": arr((n, batch, n_pages, page, cfg.n_kv_heads,
-                          cfg.head_dim), dt)}
+        kv_dt = jnp.int8 if quant else dt
+        pages = {"k": arr((n, batch, n_pages, page, cfg.n_kv_heads,
+                           cfg.head_dim), kv_dt),
+                 "v": arr((n, batch, n_pages, page, cfg.n_kv_heads,
+                           cfg.head_dim), kv_dt)}
+        if quant:
+            sshape = (n, batch, n_pages, cfg.n_kv_heads)
+            pages["k_scale"] = arr(sshape, jnp.float32,
+                                   fill=kv_quant_lib.INIT_SCALE)
+            pages["v_scale"] = arr(sshape, jnp.float32,
+                                   fill=kv_quant_lib.INIT_SCALE)
+        return pages
 
     fam = cfg.family
     if fam in ("dense", "moe", "audio"):
@@ -320,6 +341,9 @@ def cache_specs(cfg: ModelConfig, rc: RunConfig, batch: int) -> Dict:
         name = str(path[-1].key) if hasattr(path[-1], "key") else ""
         if name in ("k", "v"):
             return kv_spec
+        if name in ("k_scale", "v_scale"):
+            # per-(page, head) int8 scales shard exactly like the pages
+            return P(None, batch_axes, page_axes, None)
         if name in ("cross_k", "cross_v"):
             return P(None, batch_axes, None, None, None)
         if name == "pos":
@@ -534,8 +558,13 @@ def _block_prefill_cached(layer: Dict, cfg: ModelConfig, rc: RunConfig,
                                    fuse_qkv=rc.fuse_qkv)
     bsz, n_pages, page = kv["k"].shape[0], kv["k"].shape[1], kv["k"].shape[2]
     smax = n_pages * page
-    kf = kv["k"].reshape(bsz, smax, cfg.n_kv_heads, cfg.head_dim)
-    vf = kv["v"].reshape(bsz, smax, cfg.n_kv_heads, cfg.head_dim)
+    quant = "k_scale" in kv
+    kd = (kv_quant_lib.dequantize_pages(kv["k"], kv["k_scale"]) if quant
+          else kv["k"])
+    vd = (kv_quant_lib.dequantize_pages(kv["v"], kv["v_scale"]) if quant
+          else kv["v"])
+    kf = kd.reshape(bsz, smax, cfg.n_kv_heads, cfg.head_dim)
+    vf = vd.reshape(bsz, smax, cfg.n_kv_heads, cfg.head_dim)
 
     def write(buf, new, p):
         return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype),
@@ -552,6 +581,12 @@ def _block_prefill_cached(layer: Dict, cfg: ModelConfig, rc: RunConfig,
         x = x + y
     else:
         x = x + mlp_apply(layer["mlp"], cfg, h)
+    if quant:
+        kq, ks = kv_quant_lib.requantize_pages(kf.reshape(kd.shape),
+                                               kv["k_scale"])
+        vq, vs = kv_quant_lib.requantize_pages(vf.reshape(vd.shape),
+                                               kv["v_scale"])
+        return x, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
     return x, {"k": kf.reshape(kv["k"].shape), "v": vf.reshape(kv["v"].shape)}
 
 

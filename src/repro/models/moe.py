@@ -300,14 +300,23 @@ def moe_block_decode_paged(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
         jnp.asarray(pos, jnp.int32).reshape(-1, 1), (x.shape[0], 1))
     q, kk, v = attn.qkv_project(params["attn"], cfg, h, positions,
                                 fuse_qkv=fuse_qkv)
-    o, k_pages, v_pages = attn.paged_decode_attention(
-        q, kv["k"], kv["v"], kk, v, pos, batch_axes=batch_axes,
-        page_axes=page_axes, kv_block=kv_block)
+    if "k_scale" in kv:
+        o, k_pages, v_pages, k_scale, v_scale = attn.paged_decode_attention(
+            q, kv["k"], kv["v"], kk, v, pos, batch_axes=batch_axes,
+            page_axes=page_axes, kv_block=kv_block,
+            k_scale=kv["k_scale"], v_scale=kv["v_scale"])
+        kv_out = {"k": k_pages, "v": v_pages, "k_scale": k_scale,
+                  "v_scale": v_scale}
+    else:
+        o, k_pages, v_pages = attn.paged_decode_attention(
+            q, kv["k"], kv["v"], kk, v, pos, batch_axes=batch_axes,
+            page_axes=page_axes, kv_block=kv_block)
+        kv_out = {"k": k_pages, "v": v_pages}
     x = x + o.reshape(x.shape[0], 1, cfg.q_dim) @ params["attn"]["wo"]
     h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
     y = moe_apply_ep_decode(params["moe"], cfg, h,
                             dp_axes=batch_axes or "data")
-    return x + y, {"k": k_pages, "v": v_pages}
+    return x + y, kv_out
 
 
 def moe_block_decode(params: Dict, cfg: ModelConfig, x: jnp.ndarray,

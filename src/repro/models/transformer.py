@@ -93,22 +93,34 @@ def block_decode_paged(params: Dict, cfg: ModelConfig, x: jnp.ndarray,
     """Single-token decode against a page-sharded cache.
 
     kv: {"k","v"} each [B, n_pages, page, Hkv, D] sharded over
-    (batch_axes, page_axes). The attention (and the KV write) run
-    distributed via paged_decode_attention — no cache resharding.
+    (batch_axes, page_axes); int8 caches carry sibling "k_scale"/
+    "v_scale" leaves [B, n_pages, Hkv] (see models/kv_quant.py). The
+    attention (and the KV write) run distributed via
+    paged_decode_attention — no cache resharding.
     """
     h = rmsnorm(params["ln_attn"], x, cfg.norm_eps)
     positions = jnp.broadcast_to(
         jnp.asarray(pos, jnp.int32).reshape(-1, 1), (x.shape[0], 1))
     q, k, v = attn.qkv_project(params["attn"], cfg, h, positions,
                                fuse_qkv=fuse_qkv)
-    o, k_pages, v_pages = attn.paged_decode_attention(
-        q, kv["k"], kv["v"], k, v, pos, batch_axes=batch_axes,
-        page_axes=page_axes, kv_block=kv_block,
-        logit_softcap=cfg.attn_logit_softcap)
+    if "k_scale" in kv:
+        o, k_pages, v_pages, k_scale, v_scale = attn.paged_decode_attention(
+            q, kv["k"], kv["v"], k, v, pos, batch_axes=batch_axes,
+            page_axes=page_axes, kv_block=kv_block,
+            logit_softcap=cfg.attn_logit_softcap,
+            k_scale=kv["k_scale"], v_scale=kv["v_scale"])
+        kv_out = {"k": k_pages, "v": v_pages, "k_scale": k_scale,
+                  "v_scale": v_scale}
+    else:
+        o, k_pages, v_pages = attn.paged_decode_attention(
+            q, kv["k"], kv["v"], k, v, pos, batch_axes=batch_axes,
+            page_axes=page_axes, kv_block=kv_block,
+            logit_softcap=cfg.attn_logit_softcap)
+        kv_out = {"k": k_pages, "v": v_pages}
     x = x + o.reshape(x.shape[0], 1, cfg.q_dim) @ params["attn"]["wo"]
     h = rmsnorm(params["ln_mlp"], x, cfg.norm_eps)
     x = x + mlp_apply(params["mlp"], cfg, h)
-    return x, {"k": k_pages, "v": v_pages}
+    return x, kv_out
 
 
 def cross_block_apply(params: Dict, cfg: ModelConfig, x: jnp.ndarray,

@@ -25,6 +25,9 @@ _PREEMPT_POLICIES = ("none", "swap", "recompute")
 _ADMIT_MODES = ("continuous", "closed")
 _PLACEMENTS = ("striped", "hashed", "hotness")
 _FAULT_KINDS = ("degrade", "transient", "hot_remove")
+# mirrored from repro.models.kv_quant.KV_QUANT_MODES ("fp8" is reserved —
+# spelled here so the error message can say so without importing jax)
+_KV_QUANT_MODES = ("none", "int8", "fp8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +43,10 @@ class ServeConfig:
      * ``store_budget_bytes`` — HostPageStore LRU budget (None = ∞).
      * ``legacy_host_path`` — the frozen pre-rewrite baseline engine.
      * ``sync_prefill`` — block after prefill (benchmark accounting).
+     * ``kv_quant`` — KV page format: ``"none"`` (model dtype) or
+       ``"int8"`` (per-page-scaled int8 pages; every tier flush /
+       restore / swap / SR fetch is charged the quantized byte count —
+       see ``repro.models.kv_quant``). ``"fp8"`` is reserved.
 
     Scheduler (``repro.serving.scheduler``):
 
@@ -75,6 +82,7 @@ class ServeConfig:
     store_budget_bytes: Optional[int] = 256 << 20
     legacy_host_path: bool = False
     sync_prefill: bool = False
+    kv_quant: str = "none"
     cxl_async: bool = False
     preempt_policy: str = "none"
     admit_mode: str = "continuous"
@@ -100,6 +108,16 @@ class ServeConfig:
         if self.admit_mode not in _ADMIT_MODES:
             raise ValueError(f"unknown admit_mode {self.admit_mode!r} "
                              f"(expected one of {_ADMIT_MODES})")
+        if self.kv_quant not in _KV_QUANT_MODES:
+            raise ValueError(f"unknown kv_quant {self.kv_quant!r} "
+                             f"(expected one of {_KV_QUANT_MODES})")
+        if self.kv_quant == "fp8":
+            raise ValueError("kv_quant='fp8' is reserved but not "
+                             "implemented yet; use 'none' or 'int8'")
+        if self.kv_quant != "none" and self.legacy_host_path:
+            raise ValueError("kv_quant needs the device-resident paged "
+                             "cache; the legacy host path keeps flat "
+                             "full-precision K/V tuples")
         if self.tier_placement not in _PLACEMENTS:
             raise ValueError(f"unknown tier_placement "
                              f"{self.tier_placement!r} (expected one of "

@@ -310,6 +310,11 @@ class ServingEngine:
         if config is None:
             config = ServeConfig(**knobs)
         self.serve_config = config
+        # quantized KV pages: thread the knob into the RunConfig so
+        # cache_init emits int8 pages + scales and every downstream tier
+        # charge (flush/restore/swap/SR) sees the quantized byte counts
+        if config.kv_quant != "none" and rc.kv_quant != config.kv_quant:
+            rc = dataclasses.replace(rc, kv_quant=config.kv_quant)
         self.params = params
         self.cfg = cfg
         self.rc = rc

@@ -244,6 +244,53 @@ def test_engine_families_complete(mesh_ctx, arch):
     assert all(len(r.generated) == 3 for r in done)
 
 
+# --------------------------------------------------- int8 KV token quality
+
+def test_greedy_int8_kv_matches_baseline_token_for_token(mesh_ctx):
+    """The serving-level accuracy gate: greedy decode with the int8 KV
+    cache must reproduce the full-precision engine's tokens exactly on
+    the smoke configs — quantization noise (0.5 ulp of a 127-step page
+    grid) stays far below the greedy argmax margins."""
+    outs = {}
+    for mode in ("none", "int8"):
+        eng = _make(n_slots=2, max_seq=32, prefill_chunk=4, kv_quant=mode)
+        for rid in range(3):
+            eng.submit(Request(rid=rid, prompt=PROMPT[: 11 - rid],
+                               max_new_tokens=6))
+        eng.run(max_ticks=200)
+        outs[mode] = {r.rid: r.generated for r in eng.finished}
+        assert len(outs[mode]) == 3
+    assert outs["int8"] == outs["none"]
+
+
+def test_temperature_int8_bounded_divergence(mesh_ctx):
+    """Sampled decode under int8 KV: one borderline sample flipped by
+    quantization noise legitimately forks the sequence from that point
+    on, so exact identity is NOT the contract — the documented bound is
+    the positional match fraction (serve_bench's kv_quant axis pins the
+    same bound end-to-end; see docs/ARCHITECTURE.md "KV page format").
+    Determinism still holds: same engine seed + mode => same tokens."""
+    outs = {}
+    for mode in ("none", "int8"):
+        runs = []
+        for _ in range(2):
+            eng = _make(n_slots=2, max_seq=32, temperature=0.8, seed=7,
+                        kv_quant=mode)
+            for rid in range(3):
+                eng.submit(Request(rid=rid, prompt=[5, 6, 7],
+                                   max_new_tokens=6))
+            eng.run(max_ticks=100)
+            runs.append({r.rid: r.generated for r in eng.finished})
+        assert runs[0] == runs[1]          # seeded sampling deterministic
+        outs[mode] = runs[0]
+    total = matched = 0
+    for rid, a in outs["none"].items():
+        b = outs["int8"][rid]
+        total += max(len(a), len(b))
+        matched += sum(x == y for x, y in zip(a, b))
+    assert matched / total >= 0.5          # bounded, not exact (see above)
+
+
 # ------------------------------------------------- sampling determinism
 
 def test_temperature_sampling_deterministic_across_host_rng(mesh_ctx):
