@@ -51,6 +51,17 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
+# the --shard axis compares 1-rank vs 2-/4-rank sharded serving, which
+# needs >= 4 host devices; XLA only reads the flag at first jax init, so
+# (like repro.launch.dryrun) it must be set before any jax import — main
+# runs far too late
+if "--shard" in sys.argv and \
+        "xla_force_host_platform_device_count" not in \
+        os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_"
+                                 "count=4").strip()
+
 import numpy as np
 
 
@@ -88,7 +99,7 @@ _LOADGEN = _load_by_path("_serving_loadgen", "src/repro/serving/loadgen.py")
 SCHEMA_KEYS = {
     "top": ("bench", "arch", "config", "legacy_host_path",
             "device_resident", "speedup", "acceptance", "cxl_tier",
-            "load"),
+            "load", "shard"),
     "engine": ("prefill_tok_s", "decode_tok_s", "prefill_tok_s_best",
                "decode_tok_s_best", "prefill_tokens_per_run",
                "decode_tokens_per_run", "prefill_dispatches_per_run",
@@ -124,6 +135,13 @@ SCHEMA_KEYS = {
     + ("engine", "replay_within_1pct"),
     "fault": ("config", "fleet", "acceptance"),
     "fault_config_extra": ("fleet", "topology", "trace"),
+    "shard": ("config", "ranks", "acceptance"),
+    "shard_scenario": ("mesh_ranks", "completed", "lost_requests",
+                       "prefix_hits", "restore_stall_ns_total",
+                       "stall_ratio_vs_1rank", "tier_writes",
+                       "peer_fetches", "peer_bytes", "peer_fetch_ns",
+                       "mirror_writes", "rank_remaps",
+                       "token_identity_vs_1rank", "replay_within_1pct"),
 }
 
 
@@ -148,6 +166,8 @@ def check_schema(out) -> list:
         top.discard("cxl_tier")
     if "load" not in out:
         top.discard("load")
+    if "shard" not in out:
+        top.discard("shard")
     diff("top-level", out, top)
     if "legacy_host_path" in out:
         diff("legacy_host_path", out["legacy_host_path"],
@@ -206,6 +226,12 @@ def check_schema(out) -> list:
                     diff(f"load.fault[{arch}][{mode}].engine",
                          scen.get("engine", {}),
                          SCHEMA_KEYS["engine_stats"])
+    shard = out.get("shard")
+    if shard is not None:
+        diff("shard", shard, SCHEMA_KEYS["shard"])
+        for mode, scen in shard.get("ranks", {}).items():
+            diff(f"shard.ranks[{mode}]", scen,
+                 SCHEMA_KEYS["shard_scenario"])
     return errs
 
 
@@ -1021,6 +1047,163 @@ def bench_fault(*, prefill_chunk: int, seed: int, smoke: bool,
     return {"config": config, "fleet": fleet, "acceptance": acceptance}
 
 
+def _sharded_replay_ok(tier) -> bool:
+    """Replay gate for a ShardedTier: every rank's port-tagged trace AND
+    every peer-link lane's single-stream trace within 1% of the oracle."""
+    from repro.sim.engine import replay_page_trace
+
+    for t in tier.ranks:
+        if t.ops and not _replay_ok(t):
+            return False
+    for r in range(tier.n_ranks):
+        if not tier.peer_ops[r]:
+            continue
+        oracle = replay_page_trace(
+            tier.peer_ops[r], media=tier.peer_media, sr=False, ds=False,
+            req_bytes=tier.cfg.req_bytes,
+            dram_cache_bytes=tier.cfg.dram_cache_bytes,
+            max_inflight=tier.cfg.max_inflight)
+        if not np.allclose(np.asarray(tier.peer_op_ns[r]), oracle,
+                           rtol=0.01, atol=1e-6):
+            return False
+    return True
+
+
+def bench_shard(*, arch: str, vocab: int, dtype: str, seed: int,
+                smoke: bool, prefill_chunk: int = 8):
+    """The shard axis (``shard`` section): 1-rank vs 2-/4-rank serving.
+
+    One seeded open-loop arrival trace (bursty, zipf-shared prompt
+    catalog — the shared-prefix regime) is played against the engine at
+    every rank count on identical traffic: the 1-rank baseline runs a
+    plain ``CxlTier`` under the host mesh; the sharded runs build a
+    (1, N) mesh, shard params + the paged KV cache over the model axis
+    and attach a ``ShardedTier`` (one port set per rank + peer-link
+    lanes). Restores are blocking so the restore stall is a real,
+    deterministic simulated cost.
+
+    Acceptance gates (exit 1 from main on any failure):
+
+     * greedy token identity — every rank count reproduces the 1-rank
+       token streams exactly;
+     * sublinear restore-stall scaling — aggregate restore stall at N
+       ranks stays strictly below N x the 1-rank stall on the same
+       traffic (a hot shared prefix is fetched from media once and
+       fanned out over the peer link, not cold-restored N times);
+     * the peer link actually engaged (fetches > 0) and flush traffic
+       did not multiply with ranks;
+     * zero lost requests everywhere, every arrival completed;
+     * every rank + peer-lane trace replays within 1% of the oracle.
+    """
+    import dataclasses
+
+    import jax
+    from repro.core.sharded_tier import ShardedTier
+    from repro.launch.mesh import make_host_mesh
+    from repro.serving.config import ServeConfig
+    from repro.serving.engine import ServingEngine
+
+    n_devices = len(jax.devices())
+    rank_counts = [1] + [n for n in (2, 4) if n <= n_devices]
+    if len(rank_counts) < 2:
+        sys.exit(f"FAIL: --shard needs >= 2 devices, have {n_devices} "
+                 "(set XLA_FLAGS=--xla_force_host_platform_device_"
+                 "count=4)")
+    if 4 not in rank_counts:
+        print(f"[shard] only {n_devices} devices: 4-rank point dropped",
+              file=sys.stderr)
+
+    cfg, rc, params = _build(arch, seed, vocab, dtype)
+    # sharded decode needs the page axis divisible by every rank count
+    max_seq = 64
+    rc = dataclasses.replace(rc, kv_page_size=16)
+    n_slots = 4
+    lc = _LOADGEN.LoadConfig(
+        n_arrivals=24 if smoke else 96,
+        rate_rps=8000.0,
+        arrival="bursty",
+        zipf_s=1.2,
+        n_prompts=8 if smoke else 24,
+        prompt_len_choices=(8, 16),
+        max_new_choices=(4, 8),
+        vocab=cfg.vocab_size,
+        seed=seed,
+        slo_ttft_ms=2.0,
+        slo_tpot_ms=0.5)
+    trace = _LOADGEN.make_trace(lc)
+    max_ticks = 4_000 if smoke else 16_000
+
+    def run_one(n_ranks):
+        sc = ServeConfig(n_slots=n_slots, max_seq=max_seq,
+                         prefill_chunk=prefill_chunk, seed=seed,
+                         tp=n_ranks if n_ranks > 1 else 1,
+                         tier_topology=("dram", "ssd-fast"))
+        eng = ServingEngine(params, cfg, rc, config=sc)
+        handles, depths = _LOADGEN.drive_open_loop(eng, trace,
+                                                   max_ticks=max_ticks)
+        metrics = _LOADGEN.summarize(eng, handles, depths, lc)
+        tokens = {r.rid: list(r.generated) for r in eng.finished}
+        tier = eng.tier
+        sharded = isinstance(tier, ShardedTier)
+        c = tier.counters
+        scen = {
+            "mesh_ranks": eng.stats["mesh_ranks"],
+            "completed": metrics.completed,
+            "lost_requests": metrics.lost_requests,
+            "prefix_hits": eng.stats["prefix_hits"],
+            "restore_stall_ns_total":
+                round(eng.stats["restore_stall_ns"], 1),
+            "tier_writes": c["writes"] + c["async_writes"],
+            "peer_fetches": c.get("peer_fetches", 0),
+            "peer_bytes": c.get("peer_bytes", 0),
+            "peer_fetch_ns": round(c.get("peer_fetch_ns", 0.0), 1),
+            "mirror_writes": c.get("mirror_writes", 0),
+            "rank_remaps": c.get("rank_remaps", 0),
+            "replay_within_1pct": _sharded_replay_ok(tier) if sharded
+            else _replay_ok(tier),
+        }
+        return scen, tokens
+
+    ranks = {}
+    tokens = {}
+    with jax.set_mesh(make_host_mesh()):
+        ranks["1-rank"], tokens[1] = run_one(1)
+    for n in rank_counts[1:]:
+        ranks[f"{n}-rank"], tokens[n] = run_one(n)
+
+    base_stall = max(ranks["1-rank"]["restore_stall_ns_total"], 1e-9)
+    for name, scen in ranks.items():
+        n = scen["mesh_ranks"]
+        scen["stall_ratio_vs_1rank"] = round(
+            scen["restore_stall_ns_total"] / base_stall, 4)
+        scen["token_identity_vs_1rank"] = tokens[n] == tokens[1]
+
+    sharded = [s for s in ranks.values() if s["mesh_ranks"] > 1]
+    acceptance = {
+        "shard_token_identity": all(
+            s["token_identity_vs_1rank"] for s in ranks.values()),
+        "shard_restore_stall_sublinear": all(
+            s["stall_ratio_vs_1rank"] < s["mesh_ranks"] for s in sharded)
+        and ranks["1-rank"]["restore_stall_ns_total"] > 0,
+        "shard_peer_link_engaged": all(
+            s["peer_fetches"] > 0 for s in sharded),
+        "shard_flush_traffic_bounded": all(
+            s["tier_writes"] <= 2 * ranks["1-rank"]["tier_writes"]
+            for s in sharded),
+        "shard_zero_lost_requests": all(
+            s["lost_requests"] == 0 and s["completed"] == lc.n_arrivals
+            for s in ranks.values()),
+        "shard_replay_within_1pct": all(
+            s["replay_within_1pct"] for s in ranks.values()),
+    }
+    config = {k: getattr(lc, k) for k in lc.field_names()}
+    config.update(n_slots=n_slots, max_seq=max_seq, max_ticks=max_ticks,
+                  kv_page_size=rc.kv_page_size,
+                  rank_counts=rank_counts, n_devices=n_devices,
+                  topology=["dram", "ssd-fast"])
+    return {"config": config, "ranks": ranks, "acceptance": acceptance}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -1053,6 +1236,13 @@ def main(argv=None) -> int:
                          "harness (seeded bursty arrivals at ~1.25x "
                          "capacity; continuous-vs-closed and FIFO-vs-"
                          "preempt sweeps) and emit a load section")
+    ap.add_argument("--shard", action="store_true",
+                    help="also run the shard axis (1-rank vs 2-/4-rank "
+                         "sharded serving on identical zipf traffic, "
+                         "gated on token identity and sublinear restore-"
+                         "stall scaling) and emit a shard section; "
+                         "forces 4 host devices when XLA_FLAGS doesn't "
+                         "already")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -1097,6 +1287,11 @@ def main(argv=None) -> int:
             load["fault"] = bench_fault(
                 prefill_chunk=8, seed=args.seed, smoke=bool(args.smoke),
                 vocab=args.vocab, dtype=args.dtype)
+    # outside the host-mesh context: the sharded runs build their own
+    # (1, N) meshes; only the 1-rank baseline activates the host mesh
+    shard = bench_shard(arch=args.arch, vocab=args.vocab,
+                        dtype=args.dtype, seed=args.seed,
+                        smoke=bool(args.smoke)) if args.shard else None
     legacy = pair["legacy_host_path"]
     device = pair["device_resident"]
 
@@ -1133,6 +1328,8 @@ def main(argv=None) -> int:
         out["cxl_tier"] = cxl_tier
     if load is not None:
         out["load"] = load
+    if shard is not None:
+        out["shard"] = shard
     schema_drift = check_schema(out)
     if schema_drift:
         print("FAIL: BENCH_serve.json schema drifted from "
@@ -1189,6 +1386,17 @@ def main(argv=None) -> int:
         summary["fault_recoveries"] = {
             arch: per["faulted"]["recoveries"]
             for arch, per in fault["fleet"].items()}
+    if shard is not None:
+        summary["shard_acceptance"] = shard["acceptance"]
+        summary["shard_restore_stall_ns"] = {
+            m: s["restore_stall_ns_total"]
+            for m, s in shard["ranks"].items()}
+        summary["shard_stall_ratio_vs_1rank"] = {
+            m: s["stall_ratio_vs_1rank"]
+            for m, s in shard["ranks"].items()}
+        summary["shard_token_identity"] = {
+            m: s["token_identity_vs_1rank"]
+            for m, s in shard["ranks"].items()}
     print(json.dumps(summary, indent=2))
     if not acceptance["prefix_restore_zero_prefill"]:
         print("FAIL: resubmitted rid was not served via prefix restore",
@@ -1211,6 +1419,10 @@ def main(argv=None) -> int:
             and not all(load["fault"]["acceptance"].values()):
         print("FAIL: fault acceptance "
               f"{load['fault']['acceptance']}", file=sys.stderr)
+        return 1
+    if shard is not None and not all(shard["acceptance"].values()):
+        print(f"FAIL: shard acceptance {shard['acceptance']}",
+              file=sys.stderr)
         return 1
     return 0
 

@@ -18,4 +18,8 @@ def __getattr__(name):
         from repro.core import tier
 
         return getattr(tier, name)
+    if name == "ShardedTier":
+        from repro.core import sharded_tier
+
+        return sharded_tier.ShardedTier
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -30,6 +30,11 @@ fault preset into the attached tier (a deterministic
 ``FaultSchedule`` seeded by ``--fault-seed``) and prints a recovery
 stats line: fault ops / retries / failures, entries and bytes lost to
 hot-removed ports, and requests re-queued through RECOVERING.
+
+``--tp N`` runs sharded: the engine builds a (1, N) mesh, shards params
+and the paged KV cache over the model axis, and (with a tier attached)
+splits the topology into one root-port set per rank with cross-rank
+restores charged on a peer link. Faults then apply to rank 0's ports.
 """
 from __future__ import annotations
 
@@ -155,7 +160,8 @@ def _print_tier(engine, config):
               f"{snap['promotions']} promotions / "
               f"{snap['demotions']} demotions):")
         for p in snap["ports"]:
-            print(f"[serve]   port {p['port']} ({p['media']}): "
+            rank = f"rank {p['rank']} " if "rank" in p else ""
+            print(f"[serve]   {rank}port {p['port']} ({p['media']}): "
                   f"{p['ep_reads']} EP reads, {p['ep_writes']} writes, "
                   f"SR hit rate {p['sr_hit_rate']:.2f}, "
                   f"{p['live_bytes'] / 1024:.0f} KiB live, "
@@ -181,6 +187,13 @@ def serve(arch: str, *, smoke: bool = True, n_requests: int = 8,
     cfg = registry.smoke(arch) if smoke else registry.get(arch)
     mesh = make_host_mesh() if smoke else make_production_mesh()
     rc = RunConfig(model=cfg, shape=SHAPES["decode_32k"], mesh=MeshConfig())
+    if config.n_ranks > 1:
+        # sharded decode needs the page axis divisible by the model
+        # axis: cap the page size so each slot has >= n_ranks pages
+        import dataclasses as _dc
+        page = min(rc.kv_page_size, max(config.max_seq // config.n_ranks,
+                                        1))
+        rc = _dc.replace(rc, kv_page_size=page)
     with jax.set_mesh(mesh):
         params = M.init_model(jax.random.PRNGKey(config.seed), cfg)
         engine = ServingEngine(params, cfg, rc, config=config)
@@ -288,6 +301,13 @@ def main() -> None:
     ap.add_argument("--fault-seed", type=int, default=_DEF.fault_seed,
                     help="seed for the fault schedule's transient-error "
                          "draws (deterministic per (seed, port, attempt))")
+    ap.add_argument("--tp", type=int, default=_DEF.tp,
+                    help="tensor-parallel rank count: tp=N builds a "
+                         "(1, N) mesh, shards params + the paged KV "
+                         "cache over the model axis and gives the tier "
+                         "one root-port set per rank (needs N devices, "
+                         "e.g. XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N on CPU)")
     args = ap.parse_args()
     topology = tuple(m.strip() for m in
                      args.cxl_topology.split(",") if m.strip())
@@ -304,7 +324,7 @@ def main() -> None:
         admit_mode=args.admit_mode, tier_media=args.cxl_media,
         tier_topology=topology,
         tier_placement=args.cxl_placement, tier_sr=not args.cxl_sr_off,
-        tier_faults=tier_faults, fault_seed=args.fault_seed)
+        tier_faults=tier_faults, fault_seed=args.fault_seed, tp=args.tp)
     load = None
     if args.load:
         from repro.serving.loadgen import LoadConfig

@@ -71,7 +71,22 @@ class ServeConfig:
        ``("transient", t_ns, port, p_err[, until_ns])`` or
        ``("hot_remove", t_ns, port)``; :meth:`make_tier` folds them into
        a deterministic ``repro.sim.engine.FaultSchedule`` seeded by
-       ``fault_seed``. Requires a tier attachment.
+       ``fault_seed``. Requires a tier attachment. On a sharded tier
+       the schedule applies to rank 0's port set (port indices stay
+       per-rank-local).
+
+    Sharded serving (``repro.launch.mesh`` + ``repro.parallel``):
+
+     * ``mesh_shape`` — explicit (data, model) or (pod, data, model)
+       device-mesh shape; the engine builds it via
+       ``make_production_mesh(shape=...)`` and shards params + the
+       paged KV cache across the model axis. ``()`` means unsharded
+       (whatever mesh the caller activated, usually the host mesh).
+     * ``tp`` — tensor-parallel sugar: ``tp=N`` is ``mesh_shape=(1, N)``.
+       The model axis of ``mesh_shape``, when both are given, must
+       equal ``tp``. ``n_ranks`` (model-axis size) also shards the CXL
+       tier: :meth:`make_tier` returns a ``ShardedTier`` with one
+       port set per rank when ``n_ranks > 1``.
     """
 
     n_slots: int = 4
@@ -93,6 +108,8 @@ class ServeConfig:
     tier_step_ns: float = 100_000.0
     tier_faults: Tuple[tuple, ...] = ()
     fault_seed: int = 0
+    mesh_shape: Tuple[int, ...] = ()
+    tp: int = 1
 
     def __post_init__(self):
         """Validate spellings and cross-field constraints once."""
@@ -134,6 +151,22 @@ class ServeConfig:
         if self.tier_step_ns <= 0:
             raise ValueError("tier_step_ns must be positive "
                              f"(got {self.tier_step_ns})")
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1 (got {self.tp})")
+        if self.mesh_shape:
+            if len(self.mesh_shape) not in (2, 3) or \
+                    any(int(s) < 1 for s in self.mesh_shape):
+                raise ValueError(
+                    "mesh_shape must be a 2- or 3-tuple of positive ints "
+                    f"(got {self.mesh_shape!r})")
+            if self.tp > 1 and self.mesh_shape[-1] != self.tp:
+                raise ValueError(
+                    f"mesh_shape model axis {self.mesh_shape[-1]} "
+                    f"conflicts with tp={self.tp}; set one or make them "
+                    "agree")
+        if self.n_ranks > 1 and self.legacy_host_path:
+            raise ValueError("sharded serving needs the device-resident "
+                             "engine; the legacy host path is single-rank")
         if self.tier_faults:
             if not self.has_tier:
                 raise ValueError("tier_faults without a tier attachment: "
@@ -153,25 +186,54 @@ class ServeConfig:
         """True when this config declares a CXL tier attachment."""
         return bool(self.tier_topology or self.tier_media)
 
-    def make_tier(self):
-        """Build the declared ``CxlTier`` (or None without one).
+    @property
+    def resolved_mesh_shape(self) -> Tuple[int, ...]:
+        """The mesh shape the engine should build (``()`` = unsharded).
 
-        Lazy-imports ``repro.core.tier`` so config construction and
-        validation stay jax-free; callers that inject a prebuilt tier
-        (tests, benches) simply never call this.
+        ``mesh_shape`` wins when set; otherwise ``tp > 1`` expands to
+        ``(1, tp)``; otherwise the config is unsharded and the engine
+        runs under whatever mesh the caller activated.
+        """
+        if self.mesh_shape:
+            return tuple(int(s) for s in self.mesh_shape)
+        if self.tp > 1:
+            return (1, int(self.tp))
+        return ()
+
+    @property
+    def n_ranks(self) -> int:
+        """Model-axis size: tensor-parallel rank count (1 = unsharded)."""
+        shape = self.mesh_shape or ((1, self.tp) if self.tp > 1 else ())
+        return int(shape[-1]) if shape else 1
+
+    def _tier_config(self, faults=None):
+        """The per-tier ``TierConfig`` this config declares."""
+        from repro.core.tier import TierConfig
+        if self.tier_topology:
+            return TierConfig(topology=tuple(self.tier_topology),
+                              placement=self.tier_placement,
+                              sr_enabled=self.tier_sr, faults=faults)
+        return TierConfig(media=self.tier_media, sr_enabled=self.tier_sr,
+                          faults=faults)
+
+    def make_tier(self):
+        """Build the declared tier (or None without one).
+
+        Single-rank configs get a ``CxlTier``; ``n_ranks > 1`` gets a
+        ``ShardedTier`` with one port set per rank (fault schedule on
+        rank 0). Lazy-imports ``repro.core.tier`` so config
+        construction and validation stay jax-free; callers that inject
+        a prebuilt tier (tests, benches) simply never call this.
         """
         if not self.has_tier:
             return None
-        from repro.core.tier import CxlTier, TierConfig
-
         faults = self.make_fault_schedule()
-        if self.tier_topology:
-            return CxlTier(TierConfig(
-                topology=tuple(self.tier_topology),
-                placement=self.tier_placement, sr_enabled=self.tier_sr,
-                faults=faults))
-        return CxlTier(TierConfig(media=self.tier_media,
-                                  sr_enabled=self.tier_sr, faults=faults))
+        if self.n_ranks > 1:
+            from repro.core.sharded_tier import ShardedTier
+            return ShardedTier(self.n_ranks, self._tier_config(),
+                               faults=faults, fault_rank=0)
+        from repro.core.tier import CxlTier
+        return CxlTier(self._tier_config(faults))
 
     def make_fault_schedule(self):
         """Fold ``tier_faults`` into a ``FaultSchedule`` (None if empty).

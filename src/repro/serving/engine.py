@@ -60,6 +60,7 @@ transfer + sync) as the measured baseline for ``benchmarks/serve_bench``.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 from typing import Dict, List, Optional, Tuple
 
@@ -315,6 +316,25 @@ class ServingEngine:
         # charge (flush/restore/swap/SR) sees the quantized byte counts
         if config.kv_quant != "none" and rc.kv_quant != config.kv_quant:
             rc = dataclasses.replace(rc, kv_quant=config.kv_quant)
+        # sharded serving: build the (data, model) mesh the config asks
+        # for and activate it around every jitted dispatch — params and
+        # the paged KV cache shard over the model axis, and
+        # paged_decode_attention's shard_map body engages (the page axis
+        # carries the tensor parallelism; see models/attention.py)
+        self.mesh = None
+        mesh_shape = config.resolved_mesh_shape
+        if mesh_shape:
+            from repro.launch.mesh import make_production_mesh
+            self.mesh = make_production_mesh(shape=mesh_shape)
+            page = min(rc.kv_page_size, config.max_seq)
+            n_pages = max(config.max_seq // page, 1)
+            n_ranks = config.n_ranks
+            if n_pages % n_ranks:
+                raise ValueError(
+                    f"sharded decode needs the page axis divisible by the "
+                    f"model axis: {n_pages} pages (max_seq={config.max_seq},"
+                    f" kv_page_size={rc.kv_page_size}) % {n_ranks} ranks "
+                    "!= 0 — lower kv_page_size or adjust max_seq")
         self.params = params
         self.cfg = cfg
         self.rc = rc
@@ -338,12 +358,23 @@ class ServingEngine:
         # the caller's rc untouched (it is the measured pre-rewrite
         # baseline).
         self._hot_rc = rc
+        with self._mesh_scope():
+            fsdp_size = _fsdp_axis_size()
         if not legacy_host_path and rc.sr_prefetch_depth \
-                and _fsdp_axis_size() == 1:
+                and fsdp_size == 1:
             self._hot_rc = dataclasses.replace(
                 rc, sr_prefetch_depth=0,
                 scan_unroll=rc.scan_unroll or min(M.n_stacked(cfg), 8))
         self.cache = M.cache_init(cfg, rc, n_slots, max_seq=max_seq)
+        if self.mesh is not None:
+            # place params and the paged cache onto the mesh: params via
+            # the production sharding rules, cache leaves (pages + int8
+            # scales) via cache_specs — the page axis lands on "model"
+            self.params = jax.device_put(
+                params, shlib.shardings_from_specs(self.mesh, self.pspecs))
+            cspecs = M.cache_specs(cfg, self._hot_rc, n_slots)
+            self.cache = jax.device_put(
+                self.cache, shlib.shardings_from_specs(self.mesh, cspecs))
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.queue: List[Request] = []
         self.finished: List[Request] = []
@@ -397,8 +428,22 @@ class ServingEngine:
         # and a typo'd key raises KeyError instead of silently growing
         # the bench schema.
         self.stats = EngineStats()
+        self.stats["mesh_ranks"] = (config.n_ranks if self.mesh is not None
+                                    else 1)
 
     # ----------------------------------------------------------- step fns
+    def _mesh_scope(self):
+        """Context activating the engine's mesh (no-op when unsharded).
+
+        jax's ``set_mesh`` is a lexical context manager, so the engine
+        scopes it around every jitted dispatch: tracing then sees the
+        (data, model) mesh and the page-sharded decode takes the
+        shard_map path with a real model axis.
+        """
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return jax.set_mesh(self.mesh)
+
     def _step(self, params, cache, tokens):
         return M.decode_step(params, self.cfg, self.rc, tokens, cache,
                              self.pspecs)
@@ -520,10 +565,11 @@ class ServingEngine:
                     arr[:, None],
                     (1, self.cfg.n_codebooks, len(chunk))).copy()
             final = i == len(chunks) - 1
-            out = self._prefill_fn(self.params, self.cache,
-                                   jnp.asarray(arr), slot, pos0,
-                                   pos0 + len(chunk), self.last_tokens,
-                                   self.key, final)
+            with self._mesh_scope():
+                out = self._prefill_fn(self.params, self.cache,
+                                       jnp.asarray(arr), slot, pos0,
+                                       pos0 + len(chunk), self.last_tokens,
+                                       self.key, final)
             if final:
                 self.cache, self.last_tokens, tok, self.key = out
             else:
@@ -552,7 +598,8 @@ class ServingEngine:
             tok = (jnp.full((1, self.cfg.n_codebooks, 1), t, jnp.int32)
                    if self.cfg.family == "audio"
                    else jnp.full((1, 1), t, jnp.int32))
-            logits, mini = self.step_fn(self.params, mini, tok)
+            with self._mesh_scope():
+                logits, mini = self.step_fn(self.params, mini, tok)
             self.stats["prefill_tokens"] += 1
             self.stats["prefill_dispatches"] += 1
 
@@ -721,8 +768,9 @@ class ServingEngine:
     # ----------------------------------------------------------- advance
     def _advance(self) -> None:
         """One fused decode+sample dispatch; tokens stay on device."""
-        self.cache, self.last_tokens, self.key = self._decode_fn(
-            self.params, self.cache, self.last_tokens, self.key)
+        with self._mesh_scope():
+            self.cache, self.last_tokens, self.key = self._decode_fn(
+                self.params, self.cache, self.last_tokens, self.key)
         self.stats["steps"] += 1
         self.stats["decode_dispatches"] += 1
         self._trace[self._tick] = self.last_tokens
@@ -749,8 +797,9 @@ class ServingEngine:
                 toks[slot, :, 0] = last
             else:
                 toks[slot, 0] = last
-        logits, self.cache = self.step_fn(self.params, self.cache,
-                                          jnp.asarray(toks))
+        with self._mesh_scope():
+            logits, self.cache = self.step_fn(self.params, self.cache,
+                                              jnp.asarray(toks))
         logits.block_until_ready()
         self.stats["steps"] += 1
         self.stats["decode_dispatches"] += 1
@@ -974,6 +1023,12 @@ class ServingEngine:
         self.stats["tier_fault_failures"] = sum(
             p.fault_failures for p in self.tier.topo.ports)
         self.stats["tier_ports_down"] = len(self.tier.topo.ports_down())
+        if "peer_fetches" in tc:        # ShardedTier: cross-rank telemetry
+            self.stats["tier_peer_fetches"] = tc["peer_fetches"]
+            self.stats["tier_peer_bytes"] = tc["peer_bytes"]
+            self.stats["tier_peer_fetch_ns"] = tc["peer_fetch_ns"]
+            self.stats["tier_rank_remaps"] = tc["rank_remaps"]
+            self.stats["tier_peer_recoveries"] = tc["peer_recoveries"]
 
     def _fault_sweep(self) -> None:
         """Fold newly-fired tier faults into serving state.

@@ -139,6 +139,16 @@ class EngineStats(_StatsMapping):
     tier_lost_bytes: int = 0
     tier_ports_down: int = 0
     recoveries: int = 0
+    # sharded serving (all zero/1 on a single-rank engine): model-axis
+    # rank count, cross-rank peer-link fetches + bytes + link ns served
+    # by entry owners, and keys whose ownership migrated to a surviving
+    # rank's mirror copy after a fault (the peer-recovery path).
+    mesh_ranks: int = 1
+    tier_peer_fetches: int = 0
+    tier_peer_bytes: int = 0
+    tier_peer_fetch_ns: float = 0.0
+    tier_rank_remaps: int = 0
+    tier_peer_recoveries: int = 0
     # clocks: the tier topology's simulated time at the last tick, and
     # the engine's own tick clock (tier_step_ns per working tick plus
     # open-loop idle jumps — requests per simulated second and every SLO

@@ -378,3 +378,75 @@ def test_hot_remove_mid_decode_loses_no_requests(mesh_ctx):
                           max_inflight=tier.cfg.max_inflight,
                           faults=tier.cfg.faults),
         rtol=0.01)
+
+
+# ------------------------------------- sharded serving x fault recovery
+
+def test_sharded_hot_remove_recovers_via_peer_rank():
+    """Hot-removing one rank's entire port set mid-decode in a 2-rank
+    engine loses zero requests: keys with a peer-rank mirror remap to
+    the survivor (the engine never sees the fault), the rest re-queue
+    through RECOVERING, new flushes fall over to the live rank — and
+    every rank's fault-annotated trace plus every peer-link lane trace
+    still replays against the scalar oracle."""
+    import dataclasses
+
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=4)")
+
+    from repro.configs import registry
+    from repro.configs.base import MeshConfig, RunConfig, SHAPES
+    from repro.core.sharded_tier import ShardedTier
+    from repro.models import model as M
+    from repro.serving.config import ServeConfig
+    from repro.serving.engine import ServingEngine
+
+    cfg = registry.smoke("qwen3-1.7b")
+    rc = dataclasses.replace(
+        RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                  mesh=MeshConfig()),
+        kv_page_size=16)           # page axis divisible by 2 ranks
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    sc = ServeConfig(n_slots=4, max_seq=64, prefill_chunk=8, tp=2,
+                     cxl_async=True, preempt_policy="recompute",
+                     tier_topology=("dram", "ssd-fast"),
+                     tier_faults=(("hot_remove", 3.0e6, 0),
+                                  ("hot_remove", 3.0e6, 1)), fault_seed=0)
+    eng = ServingEngine(params, cfg, rc, config=sc)
+    metrics, handles = _drive(eng, n_arrivals=16)
+
+    assert metrics.completed == 16
+    assert metrics.lost_requests == 0
+    assert all(h.done for h in handles)
+    tier = eng.tier
+    assert isinstance(tier, ShardedTier)
+    # the whole of rank 0's topology is gone; rank 1 carries on
+    assert eng.stats["tier_ports_down"] == 2
+    assert tier.ranks[0].topo.ports_down() == [0, 1]
+    assert tier.ranks[1].topo.ports_down() == []
+    # recovery came through the peer rank's mirror copy, and the engine
+    # surfaces it in the shard telemetry
+    assert tier.shard_counters["peer_recoveries"] >= 1
+    assert eng.stats["tier_peer_recoveries"] == \
+        tier.shard_counters["peer_recoveries"]
+    assert eng.stats["tier_rank_remaps"] == \
+        tier.shard_counters["rank_remaps"]
+    assert eng.stats["tier_peer_fetches"] > 0
+    # post-removal flushes land on the surviving rank only
+    assert all(r == 1 for r in tier._owner.values())
+    # every trace replays: rank 0 against its fault schedule, rank 1
+    # clean, and both peer-link lanes as single DRAM-class streams
+    for r, t in enumerate(tier.ranks):
+        np.testing.assert_allclose(np.asarray(t.op_ns), _replay(t),
+                                   rtol=0.01, err_msg=f"rank {r}")
+        if tier.peer_ops[r]:
+            np.testing.assert_allclose(
+                np.asarray(tier.peer_op_ns[r]),
+                replay_page_trace(tier.peer_ops[r], media=tier.peer_media,
+                                  sr=False, ds=False,
+                                  req_bytes=tier.cfg.req_bytes,
+                                  dram_cache_bytes=tier.cfg.dram_cache_bytes,
+                                  max_inflight=tier.cfg.max_inflight),
+                rtol=0.01, err_msg=f"peer lane {r}")

@@ -322,3 +322,107 @@ def test_paged_decode_int8_fast_path_matches_shard_map(shape, lendraw, seed):
         else:
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        atol=1e-5, rtol=1e-5, err_msg=name)
+
+
+# ------------------------------------- real >1-rank mesh vs single rank
+
+# shapes whose page axis divides a 2-rank model axis (P % 2 == 0) — the
+# others fall back to unsharded pages under shard_map by design
+MULTI_RANK_SHAPES = [s for s in DECODE_SHAPES if s[4] % 2 == 0]
+
+_multirank = __import__("pytest").mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs >= 2 devices (XLA_FLAGS="
+           "--xla_force_host_platform_device_count=4)")
+
+
+@_multirank
+@settings(max_examples=6, deadline=None)
+@given(shape=st.sampled_from(MULTI_RANK_SHAPES),
+       lendraw=st.integers(0, 2 ** 16), seed=st.integers(0, 2 ** 16))
+def test_paged_decode_two_rank_mesh_matches_single_rank_and_ref(
+        shape, lendraw, seed):
+    """The shard_map body on a REAL (1, 2) mesh — pages physically split
+    over two model-axis ranks — must match both the single-rank fast
+    path and the exact-softmax oracle on the updated pages. This is the
+    sharded serving engine's decode tick, minus the engine."""
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.attention import paged_decode_attention
+
+    B, H, Hkv, D, P, page = shape
+    q = jax.random.normal(_key(seed, 0), (B, 1, H, D), jnp.float32)
+    kp = jax.random.normal(_key(seed, 1), (B, P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(_key(seed, 2), (B, P, page, Hkv, D), jnp.float32)
+    nk = jax.random.normal(_key(seed, 3), (B, 1, Hkv, D), jnp.float32)
+    nv = jax.random.normal(_key(seed, 4), (B, 1, Hkv, D), jnp.float32)
+    pos = jnp.asarray([(lendraw + 7 * i) % (P * page) for i in range(B)],
+                      jnp.int32)
+    with jax.set_mesh(make_production_mesh(shape=(1, 2))):
+        two = paged_decode_attention(q, kp, vp, nk, nv, pos,
+                                     batch_axes="data", page_axes="model",
+                                     force_shard_map=True)
+    with jax.set_mesh(make_host_mesh()):
+        one = paged_decode_attention(q, kp, vp, nk, nv, pos,
+                                     batch_axes="data", page_axes="model")
+    for a, b, name in zip(two, one, ("out", "k_pages", "v_pages")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5, err_msg=name)
+    # oracle on the updated pages: new_k/new_v land at pos, attention
+    # spans kv_len = pos + 1 (per-slot, so check slot by slot)
+    out2, kp2, vp2 = (np.asarray(x) for x in two)
+    g = H // Hkv
+    for b in range(B):
+        p_idx, s_idx = int(pos[b]) // page, int(pos[b]) % page
+        np.testing.assert_allclose(kp2[b, p_idx, s_idx],
+                                   np.asarray(nk)[b, 0], atol=1e-6)
+        ref = paged_flash_decode_ref(
+            jnp.asarray(q[b:b + 1]).reshape(1, Hkv, g, D),
+            jnp.moveaxis(jnp.asarray(kp2[b:b + 1]), 3, 1),
+            jnp.moveaxis(jnp.asarray(vp2[b:b + 1]), 3, 1),
+            int(pos[b]) + 1)
+        np.testing.assert_allclose(
+            out2[b].reshape(Hkv, g, D), np.asarray(ref)[0],
+            atol=1e-5, rtol=1e-5, err_msg=f"slot {b} vs oracle")
+
+
+@_multirank
+@settings(max_examples=6, deadline=None)
+@given(shape=st.sampled_from(MULTI_RANK_SHAPES),
+       lendraw=st.integers(0, 2 ** 16), seed=st.integers(0, 2 ** 16))
+def test_paged_decode_int8_two_rank_mesh_matches_single_rank(
+        shape, lendraw, seed):
+    """Quantized 5-output path on a real (1, 2) mesh: per-page int8
+    scales are sharded alongside the pages, and the sharded combine must
+    reproduce the single-rank fast path bit-for-bit on the int8 buffers
+    (monotone-scale requantization) and bitwise-close on the floats."""
+    from repro.launch.mesh import make_host_mesh, make_production_mesh
+    from repro.models.attention import paged_decode_attention
+
+    B, H, Hkv, D, P, page = shape
+    q = jax.random.normal(_key(seed, 0), (B, 1, H, D), jnp.float32)
+    kp = jax.random.normal(_key(seed, 1), (B, P, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(_key(seed, 2), (B, P, page, Hkv, D), jnp.float32)
+    nk = jax.random.normal(_key(seed, 3), (B, 1, Hkv, D), jnp.float32)
+    nv = jax.random.normal(_key(seed, 4), (B, 1, Hkv, D), jnp.float32)
+    kq, ks = _quantized_pages(kp)
+    vq, vs = _quantized_pages(vp)
+    pos = jnp.asarray([(lendraw + 7 * i) % (P * page) for i in range(B)],
+                      jnp.int32)
+    with jax.set_mesh(make_production_mesh(shape=(1, 2))):
+        two = paged_decode_attention(q, kq, vq, nk, nv, pos,
+                                     batch_axes="data", page_axes="model",
+                                     force_shard_map=True,
+                                     k_scale=ks, v_scale=vs)
+    with jax.set_mesh(make_host_mesh()):
+        one = paged_decode_attention(q, kq, vq, nk, nv, pos,
+                                     batch_axes="data", page_axes="model",
+                                     k_scale=ks, v_scale=vs)
+    assert len(two) == 5 and len(one) == 5
+    names = ("out", "k_pages", "v_pages", "k_scale", "v_scale")
+    for a, b, name in zip(two, one, names):
+        if a.dtype == jnp.int8:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+        else:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5, err_msg=name)
