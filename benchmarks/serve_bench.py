@@ -99,7 +99,7 @@ _LOADGEN = _load_by_path("_serving_loadgen", "src/repro/serving/loadgen.py")
 SCHEMA_KEYS = {
     "top": ("bench", "arch", "config", "legacy_host_path",
             "device_resident", "speedup", "acceptance", "cxl_tier",
-            "load", "shard"),
+            "load", "shard", "placement", "replay_gates"),
     "engine": ("prefill_tok_s", "decode_tok_s", "prefill_tok_s_best",
                "decode_tok_s_best", "prefill_tokens_per_run",
                "decode_tokens_per_run", "prefill_dispatches_per_run",
@@ -142,6 +142,15 @@ SCHEMA_KEYS = {
                        "peer_fetches", "peer_bytes", "peer_fetch_ns",
                        "mirror_writes", "rank_remaps",
                        "token_identity_vs_1rank", "replay_within_1pct"),
+    "placement": ("config", "churn", "shared", "acceptance"),
+    "placement_churn_scenario": ("restores", "restore_stall_ns_total",
+                                 "promotions", "demotions",
+                                 "replay_within_1pct"),
+    "placement_shared_scenario": ("restores", "restore_stall_ns_total",
+                                  "peer_bytes", "rehomes",
+                                  "multi_source_reads",
+                                  "replay_within_1pct"),
+    "replay_gate": ("where", "engine", "ok", "wall_ratio"),
 }
 
 
@@ -162,12 +171,10 @@ def check_schema(out) -> list:
                         f"-{sorted(want - got)}")
 
     top = set(SCHEMA_KEYS["top"])
-    if "cxl_tier" not in out:
-        top.discard("cxl_tier")
-    if "load" not in out:
-        top.discard("load")
-    if "shard" not in out:
-        top.discard("shard")
+    for optional in ("cxl_tier", "load", "shard", "placement",
+                     "replay_gates"):
+        if optional not in out:
+            top.discard(optional)
     diff("top-level", out, top)
     if "legacy_host_path" in out:
         diff("legacy_host_path", out["legacy_host_path"],
@@ -232,6 +239,17 @@ def check_schema(out) -> list:
         for mode, scen in shard.get("ranks", {}).items():
             diff(f"shard.ranks[{mode}]", scen,
                  SCHEMA_KEYS["shard_scenario"])
+    placement = out.get("placement")
+    if placement is not None:
+        diff("placement", placement, SCHEMA_KEYS["placement"])
+        for mode, scen in placement.get("churn", {}).items():
+            diff(f"placement.churn[{mode}]", scen,
+                 SCHEMA_KEYS["placement_churn_scenario"])
+        for mode, scen in placement.get("shared", {}).items():
+            diff(f"placement.shared[{mode}]", scen,
+                 SCHEMA_KEYS["placement_shared_scenario"])
+    for i, gate in enumerate(out.get("replay_gates", ())):
+        diff(f"replay_gates[{i}]", gate, SCHEMA_KEYS["replay_gate"])
     return errs
 
 
@@ -481,23 +499,86 @@ def _tier_scenario(params, cfg, rc, tier, prompts, *, n_slots, max_seq,
     }
 
 
-def _replay_ok(tier) -> bool:
-    """Differential gate: replay the tier's recorded (possibly
-    port-tagged) op trace through the scalar oracle; True when the
-    charged latencies reproduce within 1%."""
+# every replay gate priced this run: where it ran, which engine priced
+# it, whether it held, and the scalar/vectorized wall-time ratio — main()
+# emits the list as the artifact's "replay_gates" section
+_REPLAY_GATES = []
+
+
+def _trace_replay(ops, op_ns, *, media, topology=None, sr=True, ds=True,
+                  req_bytes=256, dram_cache_bytes=64 << 10,
+                  max_inflight=4, faults=None):
+    """Price one recorded page trace; returns (ok, engine, wall_ratio).
+
+    The scalar oracle (``replay_page_trace``) is always run — it is the
+    ground truth the 1% gate compares against. When the trace is
+    eligible for the vectorized closed form (DRAM-class media on every
+    lane, no fault annotations — ``page_trace_closed_form`` rejects the
+    rest), that engine prices the gate too and the ratio of the two
+    wall times is recorded; ineligible traces fall back to the scalar
+    pricing with ratio 1.0.
+    """
     from repro.sim.engine import replay_page_trace
 
+    t0 = time.perf_counter()
     oracle = replay_page_trace(
-        tier.ops,
-        media=tier.cfg.media_name,
-        topology=tier.cfg.port_medias if tier.cfg.tagged else None,
-        sr=tier.cfg.sr_enabled, ds=tier.cfg.ds_enabled,
-        req_bytes=tier.cfg.req_bytes,
-        dram_cache_bytes=tier.cfg.dram_cache_bytes,
-        max_inflight=tier.cfg.max_inflight,
-        faults=tier.cfg.faults)
-    return bool(np.allclose(np.asarray(tier.op_ns), oracle,
-                            rtol=0.01, atol=1e-6))
+        ops, media=media, topology=topology, sr=sr, ds=ds,
+        req_bytes=req_bytes, dram_cache_bytes=dram_cache_bytes,
+        max_inflight=max_inflight, faults=faults)
+    t_scalar = time.perf_counter() - t0
+    engine, ratio, priced = "scalar", 1.0, oracle
+    if faults is None:
+        from repro.sim.vector import page_trace_closed_form
+        try:
+            t0 = time.perf_counter()
+            priced = page_trace_closed_form(
+                ops, topology if topology is not None else media,
+                ds=ds, req_bytes=req_bytes, max_inflight=max_inflight)
+            engine = "vectorized"
+            ratio = t_scalar / max(time.perf_counter() - t0, 1e-9)
+        except ValueError:
+            priced = oracle
+    ok = bool(np.allclose(np.asarray(op_ns), priced, rtol=0.01, atol=1e-6))
+    if engine == "vectorized":
+        # the closed form must itself sit on the oracle, not just on the
+        # live charges — a drifting engine must not price gates
+        ok = ok and bool(np.allclose(priced, oracle, rtol=0.01, atol=1e-6))
+    return ok, engine, ratio
+
+
+def _replay_gate(tier, where: str = "") -> bool:
+    """Differential gate: replay every op trace the tier recorded within
+    1% — the single rank trace of a ``CxlTier``, or every rank's
+    port-tagged trace plus every peer-link lane of a ``ShardedTier``.
+    Each priced trace appends a record to ``_REPLAY_GATES``."""
+    tiers = getattr(tier, "ranks", [tier])
+    ok = True
+    for i, t in enumerate(tiers):
+        if not t.ops:
+            continue
+        good, engine, ratio = _trace_replay(
+            t.ops, t.op_ns, media=t.cfg.media_name,
+            topology=t.cfg.port_medias if t.cfg.tagged else None,
+            sr=t.cfg.sr_enabled, ds=t.cfg.ds_enabled,
+            req_bytes=t.cfg.req_bytes,
+            dram_cache_bytes=t.cfg.dram_cache_bytes,
+            max_inflight=t.cfg.max_inflight, faults=t.cfg.faults)
+        label = where if len(tiers) == 1 else f"{where}/rank{i}"
+        _REPLAY_GATES.append({"where": label, "engine": engine,
+                              "ok": good, "wall_ratio": round(ratio, 2)})
+        ok &= good
+    for r in range(getattr(tier, "n_ranks", 0)):
+        if not tier.peer_ops[r]:
+            continue
+        good, engine, ratio = _trace_replay(
+            tier.peer_ops[r], tier.peer_op_ns[r], media=tier.peer_media,
+            sr=False, ds=False, req_bytes=tier.cfg.req_bytes,
+            dram_cache_bytes=tier.cfg.dram_cache_bytes,
+            max_inflight=tier.cfg.max_inflight)
+        _REPLAY_GATES.append({"where": f"{where}/peer{r}", "engine": engine,
+                              "ok": good, "wall_ratio": round(ratio, 2)})
+        ok &= good
+    return ok
 
 
 # topology axis: 1-port baseline vs multi-port heterogeneous topologies
@@ -536,7 +617,7 @@ def _sched_metrics(eng, tier) -> dict:
         "swap_in_bytes": eng.stats["swap_in_bytes"],
         "inflight_peak": eng.stats["sched_inflight_peak"],
         "prefix_hits": eng.stats["prefix_hits"],
-        "replay_within_1pct": _replay_ok(tier),
+        "replay_within_1pct": _replay_gate(tier, "scheduler"),
     }
 
 
@@ -680,7 +761,8 @@ def bench_cxl_tier(params, cfg, rc, *, n_slots: int, max_seq: int,
                 for p in tier.port_stats()]
             res["promotions"] = tier.counters["promotions"]
             res["demotions"] = tier.counters["demotions"]
-            res["replay_within_1pct"] = _replay_ok(tier)
+            res["replay_within_1pct"] = _replay_gate(
+                tier, f"topology/{name}/sr={sr}")
             replay_within_1pct &= res["replay_within_1pct"]
             per["sr_on" if sr else "sr_off"] = res
         topo[name] = per
@@ -798,7 +880,7 @@ def bench_kv_quant(*, arch: str, vocab: int, n_slots: int, max_seq: int,
             "write_bytes": tier.counters["write_bytes"],
             "prefetch_bytes": tier.counters["prefetch_bytes"],
             "store_bytes": eng.stats["store_bytes"],
-            "replay_within_1pct": _replay_ok(tier),
+            "replay_within_1pct": _replay_gate(tier, f"kv_quant/{kv_quant}"),
         }
         return scen, tokens
 
@@ -912,7 +994,8 @@ def bench_load(params, cfg, rc, *, prefill_chunk: int, seed: int,
                                                    max_ticks=max_ticks)
         res = _LOADGEN.summarize(eng, handles, depths, lc).as_dict()
         res["engine"] = eng.stats.as_dict()
-        res["replay_within_1pct"] = _replay_ok(tier)
+        res["replay_within_1pct"] = _replay_gate(
+            tier, f"load/{admit_mode}/{policy}")
         return res
 
     batching = {"closed": run_one("closed", "none"),
@@ -1003,7 +1086,7 @@ def bench_fault(*, prefill_chunk: int, seed: int, smoke: bool,
                                                    max_ticks=max_ticks)
         res = _LOADGEN.summarize(eng, handles, depths, lc).as_dict()
         res["engine"] = eng.stats.as_dict()
-        res["replay_within_1pct"] = _replay_ok(eng.tier)
+        res["replay_within_1pct"] = _replay_gate(eng.tier, "fault")
         return res
 
     fleet = {}
@@ -1045,28 +1128,6 @@ def bench_fault(*, prefill_chunk: int, seed: int, smoke: bool,
                   fleet=list(FAULT_FLEET), topology=list(FAULT_TOPOLOGY),
                   trace=[list(e) for e in FAULT_TRACE])
     return {"config": config, "fleet": fleet, "acceptance": acceptance}
-
-
-def _sharded_replay_ok(tier) -> bool:
-    """Replay gate for a ShardedTier: every rank's port-tagged trace AND
-    every peer-link lane's single-stream trace within 1% of the oracle."""
-    from repro.sim.engine import replay_page_trace
-
-    for t in tier.ranks:
-        if t.ops and not _replay_ok(t):
-            return False
-    for r in range(tier.n_ranks):
-        if not tier.peer_ops[r]:
-            continue
-        oracle = replay_page_trace(
-            tier.peer_ops[r], media=tier.peer_media, sr=False, ds=False,
-            req_bytes=tier.cfg.req_bytes,
-            dram_cache_bytes=tier.cfg.dram_cache_bytes,
-            max_inflight=tier.cfg.max_inflight)
-        if not np.allclose(np.asarray(tier.peer_op_ns[r]), oracle,
-                           rtol=0.01, atol=1e-6):
-            return False
-    return True
 
 
 def bench_shard(*, arch: str, vocab: int, dtype: str, seed: int,
@@ -1159,8 +1220,7 @@ def bench_shard(*, arch: str, vocab: int, dtype: str, seed: int,
             "peer_fetch_ns": round(c.get("peer_fetch_ns", 0.0), 1),
             "mirror_writes": c.get("mirror_writes", 0),
             "rank_remaps": c.get("rank_remaps", 0),
-            "replay_within_1pct": _sharded_replay_ok(tier) if sharded
-            else _replay_ok(tier),
+            "replay_within_1pct": _replay_gate(tier, f"shard/{n_ranks}-rank"),
         }
         return scen, tokens
 
@@ -1204,6 +1264,162 @@ def bench_shard(*, arch: str, vocab: int, dtype: str, seed: int,
     return {"config": config, "ranks": ranks, "acceptance": acceptance}
 
 
+def _zipf_churn_trace(seed: int, *, n_keys: int = 24, steps: int = 900,
+                      phases: int = 3, alpha: float = 1.4,
+                      nbytes: int = 32 << 10, flush_p: float = 0.06):
+    """Phase-rotated zipf churn traffic for the placement axis.
+
+    The zipf head rotates across the key space every ``steps/phases``
+    ops, so yesterday's hot entries go cold — the regime where a plain
+    promotion counter keeps thrashing the fast port while the learned
+    mixture re-classifies. Returns ``("read"|"write", key, nbytes)``
+    tuples; writes model the occasional re-flush of a mutated entry.
+    """
+    import random
+    rng = random.Random(seed)
+    trace = []
+    w = [1.0 / (r + 1) ** alpha for r in range(n_keys)]
+    for ph in range(phases):
+        shift = ph * (n_keys // phases)
+        ids = [(i + shift) % n_keys for i in range(n_keys)]
+        for _ in range(steps // phases):
+            k = ids[rng.choices(range(n_keys), weights=w)[0]]
+            trace.append(("read", f"k{k}", nbytes))
+            if rng.random() < flush_p:
+                trace.append(("write", f"k{k}", nbytes))
+    return trace
+
+
+def _zipf_shared_trace(seed: int, *, n_ranks: int = 2, n_keys: int = 12,
+                       steps: int = 600, alpha: float = 1.4,
+                       nbytes: int = 32 << 10, affinity: float = 0.85,
+                       flush_p: float = 0.08):
+    """Zipf-shared multi-rank traffic: requester-rank-tagged restores.
+
+    Each shared prefix has a dominant requester rank (``affinity`` of
+    its restores come from it) that the blake2b hash home ignores —
+    exactly what learned re-homing exploits. Returns
+    ``("read"|"write", key, nbytes, req_rank)`` tuples (rank None on
+    writes).
+    """
+    import random
+    rng = random.Random(seed)
+    dom = {k: rng.randrange(n_ranks) for k in range(n_keys)}
+    w = [1.0 / (i + 1) ** alpha for i in range(n_keys)]
+    trace = []
+    for _ in range(steps):
+        k = rng.choices(range(n_keys), weights=w)[0]
+        r = dom[k] if rng.random() < affinity else rng.randrange(n_ranks)
+        trace.append(("read", f"p{k}", nbytes, r))
+        if rng.random() < flush_p:
+            trace.append(("write", f"p{k}", nbytes, None))
+    return trace
+
+
+def bench_placement(*, seed: int, smoke: bool):
+    """The placement axis (``placement`` section + the standalone
+    BENCH_serve_placement.json artifact): the learned GMM placement
+    policy (``repro.sim.policy``) vs the heuristics it replaces, on
+    identical traces driven straight at the tiers.
+
+     * **churn** — zipf-churn traffic (the hot set rotates every phase)
+       against a 3-port heterogeneous ``CxlTier``:
+       ``placement="learned"`` vs the ``hotness`` counter. Gate:
+       learned strictly lowers aggregate restore stall.
+     * **shared** — zipf-shared requester-tagged traffic against a
+       2-rank ``ShardedTier``: learned cross-rank homing (re-home +
+       multi-source restores) vs the plain blake2b hash home. Gates:
+       learned strictly lowers aggregate peer bytes AND aggregate
+       restore stall.
+
+    Every tier trace must replay within 1% of the scalar oracle
+    (``_replay_gate``, which also records the pricing engine and the
+    wall-time ratio in the artifact's ``replay_gates`` section).
+    """
+    from repro.core.sharded_tier import ShardedTier
+    from repro.core.tier import CxlTier, TierConfig
+
+    steps = 300 if smoke else 900
+    shared_steps = 240 if smoke else 600
+    nb = 32 << 10
+    topo3 = ("dram", "ssd-fast", "ssd-slow")
+    topo2 = ("dram", "ssd-slow")
+
+    churn_tr = _zipf_churn_trace(seed + 11, steps=steps, nbytes=nb)
+    churn = {}
+    for placement in ("hotness", "learned"):
+        tier = CxlTier(TierConfig(topology=topo3, placement=placement))
+        for k in sorted({k for _, k, _ in churn_tr}):
+            tier.write_entry(k, nb)
+        stall, reads = 0.0, 0
+        for op, k, n in churn_tr:
+            if op == "read":
+                stall += tier.read_entry(k, n)
+                reads += 1
+            else:
+                tier.write_entry(k, n)
+            tier.advance(2000.0)
+        c = tier.counters
+        churn[placement] = {
+            "restores": reads,
+            "restore_stall_ns_total": round(stall, 1),
+            "promotions": c["promotions"],
+            "demotions": c["demotions"],
+            "replay_within_1pct": _replay_gate(
+                tier, f"placement/churn/{placement}"),
+        }
+
+    shared_tr = _zipf_shared_trace(seed + 17, steps=shared_steps,
+                                   nbytes=nb)
+    shared = {}
+    for placement in ("hashed", "learned"):
+        tier = ShardedTier(2, TierConfig(topology=topo2,
+                                         placement=placement))
+        for k in sorted({e[1] for e in shared_tr}):
+            tier.write_entry(k, nb)
+        stall, reads = 0.0, 0
+        for op, k, n, r in shared_tr:
+            if op == "read":
+                stall += tier.read_entry(k, n, req_rank=r)
+                reads += 1
+            else:
+                tier.write_entry(k, n)
+            tier.advance(2000.0)
+        c = tier.counters
+        shared[placement] = {
+            "restores": reads,
+            "restore_stall_ns_total": round(stall, 1),
+            "peer_bytes": c["peer_bytes"],
+            "rehomes": c["rehomes"],
+            "multi_source_reads": c["multi_source_reads"],
+            "replay_within_1pct": _replay_gate(
+                tier, f"placement/shared/{placement}"),
+        }
+
+    acceptance = {
+        "learned_beats_hotness_on_churn_stall":
+            churn["learned"]["restore_stall_ns_total"]
+            < churn["hotness"]["restore_stall_ns_total"],
+        "learned_home_beats_hash_home_stall":
+            shared["learned"]["restore_stall_ns_total"]
+            < shared["hashed"]["restore_stall_ns_total"],
+        "learned_home_beats_hash_home_peer_bytes":
+            shared["learned"]["peer_bytes"] < shared["hashed"]["peer_bytes"],
+        "replay_within_1pct": all(
+            s["replay_within_1pct"]
+            for axis in (churn, shared) for s in axis.values()),
+    }
+    return {
+        "config": {"seed": seed, "smoke": bool(smoke), "entry_bytes": nb,
+                   "churn_steps": steps, "shared_steps": shared_steps,
+                   "churn_topology": list(topo3),
+                   "shared_topology": list(topo2), "shared_ranks": 2},
+        "churn": churn,
+        "shared": shared,
+        "acceptance": acceptance,
+    }
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -1243,6 +1459,14 @@ def main(argv=None) -> int:
                          "stall scaling) and emit a shard section; "
                          "forces 4 host devices when XLA_FLAGS doesn't "
                          "already")
+    ap.add_argument("--placement", action="store_true",
+                    help="also run the placement axis (learned GMM "
+                         "placement vs the hotness counter on zipf-churn "
+                         "traffic; learned cross-rank homing vs the hash "
+                         "home on zipf-shared 2-rank traffic) and emit a "
+                         "placement section plus the standalone "
+                         "--placement-out artifact")
+    ap.add_argument("--placement-out", default="BENCH_serve_placement.json")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
@@ -1292,6 +1516,8 @@ def main(argv=None) -> int:
     shard = bench_shard(arch=args.arch, vocab=args.vocab,
                         dtype=args.dtype, seed=args.seed,
                         smoke=bool(args.smoke)) if args.shard else None
+    placement = bench_placement(seed=args.seed, smoke=bool(args.smoke)) \
+        if args.placement else None
     legacy = pair["legacy_host_path"]
     device = pair["device_resident"]
 
@@ -1330,6 +1556,10 @@ def main(argv=None) -> int:
         out["load"] = load
     if shard is not None:
         out["shard"] = shard
+    if placement is not None:
+        out["placement"] = placement
+    if _REPLAY_GATES:
+        out["replay_gates"] = _REPLAY_GATES
     schema_drift = check_schema(out)
     if schema_drift:
         print("FAIL: BENCH_serve.json schema drifted from "
@@ -1338,6 +1568,12 @@ def main(argv=None) -> int:
         return 1
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
+    if placement is not None:
+        # the placement gates also ship standalone (CI extracts/uploads
+        # this artifact and fails the job on any acceptance violation)
+        with open(args.placement_out, "w") as f:
+            json.dump({"bench": "serve_placement", **placement},
+                      f, indent=2)
     summary = {"speedup": speedup, "acceptance": acceptance,
                "out": args.out}
     if cxl_tier is not None:
@@ -1386,6 +1622,16 @@ def main(argv=None) -> int:
         summary["fault_recoveries"] = {
             arch: per["faulted"]["recoveries"]
             for arch, per in fault["fleet"].items()}
+    if placement is not None:
+        summary["placement_acceptance"] = placement["acceptance"]
+        summary["placement_churn_stall_ns"] = {
+            m: s_["restore_stall_ns_total"]
+            for m, s_ in placement["churn"].items()}
+        summary["placement_shared_stall_ns"] = {
+            m: s_["restore_stall_ns_total"]
+            for m, s_ in placement["shared"].items()}
+        summary["placement_shared_peer_bytes"] = {
+            m: s_["peer_bytes"] for m, s_ in placement["shared"].items()}
     if shard is not None:
         summary["shard_acceptance"] = shard["acceptance"]
         summary["shard_restore_stall_ns"] = {
@@ -1422,6 +1668,10 @@ def main(argv=None) -> int:
         return 1
     if shard is not None and not all(shard["acceptance"].values()):
         print(f"FAIL: shard acceptance {shard['acceptance']}",
+              file=sys.stderr)
+        return 1
+    if placement is not None and not all(placement["acceptance"].values()):
+        print(f"FAIL: placement acceptance {placement['acceptance']}",
               file=sys.stderr)
         return 1
     return 0

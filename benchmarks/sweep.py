@@ -66,6 +66,9 @@ def main() -> int:
 
     payload = sw.bench(scenarios, compare=not args.no_compare,
                        equivalence_sample=args.equivalence_sample)
+    # async page-trace closed form vs the scalar oracle (every set,
+    # including --smoke): rel-err and wall-time-speedup gated
+    payload["page_trace"] = sw.page_trace_bench()
     payload["matrix"]["set"] = set_name
     payload["matrix"]["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ",
                                                    time.gmtime())
@@ -84,12 +87,17 @@ def main() -> int:
               f"max rel err {acc['max_rel_err']:.2e} "
               f"(tol {acc['tolerance']}) -> "
               f"{'PASS' if acc['pass'] else 'FAIL'}")
+    pt = payload["page_trace"]
+    for name, s in pt["scenarios"].items():
+        print(f"[sweep] page-trace {name}: max rel err "
+              f"{s['max_rel_err']:.2e}, closed form {s['speedup']}x "
+              f"vs oracle -> {'PASS' if s['pass'] else 'FAIL'}")
 
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     print(f"[sweep] wrote {args.out}")
 
-    return 0 if (acc["pass"] is not False) else 1
+    return 0 if (acc["pass"] is not False and pt["pass"]) else 1
 
 
 if __name__ == "__main__":

@@ -24,7 +24,20 @@ Placement becomes a cross-rank decision:
  * **mirror on first share** — the first cross-rank restore also
    writes a mirror copy to the next rank over, so a later hot-remove
    of the home rank's port recovers from the peer's copy instead of
-   losing the entry (see :meth:`ShardedTier.take_lost_keys`).
+   losing the entry (see :meth:`ShardedTier.take_lost_keys`);
+ * **learned re-homing** (``placement="learned"``) — a shared
+   :class:`repro.sim.policy.LearnedPlacement` watches per-rank restore
+   demand (callers tag restores with the requesting rank). Hot shared
+   entries with more than one live copy serve **multi-source**: every
+   holder rank fetches locally and the missing shards split across the
+   holders' outbound lanes in parallel (two holders of a 2-rank tier
+   move *zero* peer bytes), and on the next flush the entry *re-homes*
+   to the rank whose requests restore it most — a restore-frequency-
+   weighted override on top of the blake2b hash home, charged as the
+   flush write onto the new rank with the stale copies freed
+   (``shard_counters["rehomes"]``). Faults stay consistent: the
+   override target falls over to the next live rank, dead holders drop
+   out of the multi-source set, and mirror bookkeeping is unchanged.
 
 Every rank's page trace stays independently replayable: rank ``r``'s
 ``CxlTier`` records its own (port-tagged) op trace against its own
@@ -46,6 +59,7 @@ from typing import Dict, List, Optional, Set, Tuple
 from repro.core.tier import CxlTier, TierConfig, TierHandle, _stable_hash
 from repro.sim.engine import (PAGE_ADVANCE, PAGE_READ, PAGE_READ_ASYNC,
                               FaultSchedule, OpHandle, PageStream)
+from repro.sim.policy import LearnedPlacement
 
 # media spec for the inter-rank peer-link lane: the hop crosses the CXL
 # fabric into the owning rank's memory, so it times like a DRAM-class
@@ -151,11 +165,23 @@ class ShardedTier:
         self._owner: Dict[object, int] = {}        # key -> primary rank
         self._holders: Dict[object, Set[int]] = {}  # key -> ranks w/ copy
         self._peer_pending: Dict[int, Tuple[int, OpHandle]] = {}
+        # async multi-source companions: extra holder fetches + their
+        # lane transfers riding one handle ("tier"/"link", rank, handle)
+        self._companions: Dict[int, List[Tuple[str, int, object]]] = {}
         self.last_entry_failed = False
         self.topo = _ShardedTopoView(self.ranks, self.peer)
+        # learned cross-rank homing state (placement="learned" only): the
+        # shared policy classifies hot shared entries; per-rank restore
+        # weights pick the re-home target (decayed like tier heat)
+        self._policy: Optional[LearnedPlacement] = (
+            LearnedPlacement(half_life_ns=config.heat_half_life_ns)
+            if config.placement == "learned" else None)
+        self._rank_weight: Dict[object, List[float]] = {}
+        self._rank_weight_t: Dict[object, float] = {}
         self.shard_counters = {"peer_fetches": 0, "peer_fetch_ns": 0.0,
                                "peer_bytes": 0, "mirror_writes": 0,
-                               "rank_remaps": 0, "peer_recoveries": 0}
+                               "rank_remaps": 0, "peer_recoveries": 0,
+                               "rehomes": 0, "multi_source_reads": 0}
 
     # ------------------------------------------------------------ helpers
     @staticmethod
@@ -205,15 +231,15 @@ class ShardedTier:
                 return cand
         return start
 
-    def _peer_span(self, rank: int, key, nbytes: int) -> Tuple[int, int]:
-        """Lane address span for ``key``'s cross-rank transfer.
+    def _peer_span(self, rank: int, key, pbytes: int) -> Tuple[int, int]:
+        """Lane address span for ``pbytes`` of ``key`` on ``rank``'s lane.
 
         Each lane has its own page-aligned bump allocator so repeated
         restores of the same hot entry re-cover the same lane range
         (warm link-side buffering), mirroring the per-port allocators of
         the rank tiers.
         """
-        pbytes = max((nbytes * (self.n_ranks - 1)) // self.n_ranks, 1)
+        pbytes = max(int(pbytes), 1)
         cached = self._peer_addr[rank].get(key)
         if cached is not None and cached[1] == pbytes:
             return cached
@@ -250,6 +276,61 @@ class ShardedTier:
                 self.shard_counters["mirror_writes"] += 1
                 return
 
+    def _collective_pbytes(self, nbytes: int) -> int:
+        """Link bytes for a collective restore: the non-owner ranks'
+        shards, ``nbytes * (N - 1) / N``."""
+        return max((int(nbytes) * (self.n_ranks - 1)) // self.n_ranks, 1)
+
+    # ------------------------------------------------- learned re-homing
+    def _note_rank_restore(self, key, nbytes: int,
+                           req_rank: Optional[int]) -> None:
+        """Feed one restore into the learned homing state.
+
+        ``req_rank`` is the rank whose request drove the restore; the
+        per-rank weights it accumulates (decayed by the tier's heat
+        half-life) pick the re-home target. Restores with no requesting
+        rank still train the hot/cold mixture."""
+        now = self.topo.now
+        self._policy.observe(key, now, int(nbytes))
+        if req_rank is None:
+            return
+        if not 0 <= int(req_rank) < self.n_ranks:
+            raise ValueError(f"req_rank {req_rank} out of range for "
+                             f"{self.n_ranks} ranks")
+        w = self._rank_weight.get(key)
+        if w is None:
+            w = self._rank_weight[key] = [0.0] * self.n_ranks
+        hl = self.cfg.heat_half_life_ns
+        if hl > 0.0:
+            dt = max(0.0, now - self._rank_weight_t.get(key, now))
+            decay = 0.5 ** (dt / hl)
+            for r in range(self.n_ranks):
+                w[r] *= decay
+        w[int(req_rank)] += 1.0
+        self._rank_weight_t[key] = now
+
+    def _preferred_home(self, key) -> Optional[int]:
+        """Restore-frequency-weighted home override for a hot entry.
+
+        Returns the live rank whose requests restore ``key`` most, or
+        None when the policy is off, the entry is not classified hot,
+        or no per-rank demand has been observed — callers then keep the
+        hash home / current owner."""
+        if self._policy is None:
+            return None
+        w = self._rank_weight.get(key)
+        if w is None or not any(w):
+            return None
+        if not self._policy.is_hot(key, self.topo.now):
+            return None
+        best = max(range(self.n_ranks), key=lambda r: w[r])
+        return self._live_rank(best)
+
+    def _live_holders(self, key, owner: int) -> List[int]:
+        """Ranks currently holding a live copy of ``key`` (sorted)."""
+        held = self._holders.get(key, {owner})
+        return sorted(r for r in held if self.ranks[r].has_entry(key))
+
     # ---------------------------------------------------- blocking ops
     def write_entry(self, key, nbytes: int) -> float:
         """Flush an entry once, to its owning rank's port set.
@@ -262,6 +343,13 @@ class ShardedTier:
         owner = self._resolve_owner(key)
         if owner is None:
             owner = self._live_rank(self.home_rank(key))
+        pref = self._preferred_home(key)
+        if pref is not None and pref != owner:
+            # learned re-home: migrate the entry to the rank whose
+            # requests restore it most; the flush below IS the charged
+            # migration write, and the holder sweep frees stale copies
+            owner = pref
+            self.shard_counters["rehomes"] += 1
         for r in sorted(self._holders.get(key, ())):
             if r != owner:
                 self.ranks[r].free_entry(key)
@@ -271,7 +359,8 @@ class ShardedTier:
         self._holders[key] = {owner}
         return ns
 
-    def read_entry(self, key, nbytes: int) -> float:
+    def read_entry(self, key, nbytes: int,
+                   req_rank: Optional[int] = None) -> float:
         """Cross-rank demand restore: one media fetch + one link hop.
 
         The owning rank performs the only real media fetch; the other
@@ -279,6 +368,12 @@ class ShardedTier:
         (``nbytes * (N - 1) / N`` at link speed), serialized after the
         media fetch — the returned stall is the sum. First share also
         mirrors the entry to the neighbor rank.
+
+        ``req_rank`` tags the requesting rank for the learned homing
+        policy (ignored otherwise); under ``placement="learned"`` a hot
+        entry with multiple live copies is served multi-source instead
+        (every holder fetches locally, missing shards split across the
+        holders' lanes — see :meth:`_read_multi_source`).
         """
         owner = self._resolve_owner(key)
         if owner is None:
@@ -288,6 +383,11 @@ class ShardedTier:
             owner = self._live_rank(self.home_rank(key))
             self._owner[key] = owner
             self._holders.setdefault(key, set()).add(owner)
+        if self._policy is not None:
+            self._note_rank_restore(key, nbytes, req_rank)
+            holders = self._live_holders(key, owner)
+            if len(holders) > 1 and self._policy.is_hot(key, self.topo.now):
+                return self._read_multi_source(key, nbytes, holders)
         ns = self.ranks[owner].read_entry(key, nbytes)
         failed = self.ranks[owner].last_entry_failed
         if failed:
@@ -302,7 +402,8 @@ class ShardedTier:
         self.last_entry_failed = failed
         if failed:
             return ns
-        addr, pbytes = self._peer_span(owner, key, nbytes)
+        addr, pbytes = self._peer_span(owner, key,
+                                       self._collective_pbytes(nbytes))
         link_ns = self.peer[owner].read(addr, pbytes)
         self._charge_peer(owner, PAGE_READ, addr, pbytes, link_ns)
         self.shard_counters["peer_fetches"] += 1
@@ -311,12 +412,62 @@ class ShardedTier:
         self._mirror(key, nbytes, owner)
         return ns + link_ns
 
+    def _read_multi_source(self, key, nbytes: int,
+                           holders: List[int]) -> float:
+        """Collective restore of a hot entry from every live holder.
+
+        Each holder fetches its local copy in parallel (stall is the
+        max, not the sum — the fetches ride different ranks' ports) and
+        the ``(N - H) / N`` of the payload held by no requester splits
+        evenly across the holders' outbound lanes. With every rank
+        holding a copy no peer bytes move at all. No mirror write is
+        needed: multi-source only triggers with >= 2 live copies.
+        """
+        fetch: Dict[int, float] = {}
+        ok: List[int] = []
+        worst = 0.0
+        for r in holders:
+            ns = self.ranks[r].read_entry(key, nbytes)
+            worst = max(worst, ns)
+            if self.ranks[r].last_entry_failed:
+                continue
+            ok.append(r)
+            fetch[r] = ns
+        if not ok:
+            self.last_entry_failed = True
+            return worst
+        h = len(ok)
+        miss = max((int(nbytes) * (self.n_ranks - h)) // self.n_ranks, 0)
+        stall = max(fetch.values())
+        if miss > 0:
+            share = -(-miss // h)
+            left = miss
+            for r in ok:
+                pb = min(share, left)
+                if pb <= 0:
+                    break
+                left -= pb
+                addr, pb = self._peer_span(r, key, pb)
+                link_ns = self.peer[r].read(addr, pb)
+                self._charge_peer(r, PAGE_READ, addr, pb, link_ns)
+                self.shard_counters["peer_fetches"] += 1
+                self.shard_counters["peer_fetch_ns"] += link_ns
+                self.shard_counters["peer_bytes"] += pb
+                stall = max(stall, fetch[r] + link_ns)
+        self.shard_counters["multi_source_reads"] += 1
+        self.last_entry_failed = False
+        return stall
+
     # ------------------------------------------------------- async ops
     def write_entry_async(self, key, nbytes: int) -> TierHandle:
         """Background flush to the owning rank (handle rank-tagged)."""
         owner = self._resolve_owner(key)
         if owner is None:
             owner = self._live_rank(self.home_rank(key))
+        pref = self._preferred_home(key)
+        if pref is not None and pref != owner:
+            owner = pref
+            self.shard_counters["rehomes"] += 1
         for r in sorted(self._holders.get(key, ())):
             if r != owner:
                 self.ranks[r].free_entry(key)
@@ -326,13 +477,15 @@ class ShardedTier:
         self._holders[key] = {owner}
         return handle
 
-    def read_entry_async(self, key, nbytes: int) -> TierHandle:
+    def read_entry_async(self, key, nbytes: int,
+                         req_rank: Optional[int] = None) -> TierHandle:
         """Non-blocking cross-rank restore.
 
         The owning rank's media fetch and the peer-link transfer are
         both issued without blocking; the handle completes only when
         the media lanes *and* the link op have landed (:meth:`poll`).
-        The issuer pays only the issue-slot waits.
+        The issuer pays only the issue-slot waits. ``req_rank`` and the
+        learned multi-source path behave as in :meth:`read_entry`.
         """
         owner = self._resolve_owner(key)
         if owner is None:
@@ -340,10 +493,16 @@ class ShardedTier:
             owner = self._live_rank(self.home_rank(key))
             self._owner[key] = owner
             self._holders.setdefault(key, set()).add(owner)
+        if self._policy is not None:
+            self._note_rank_restore(key, nbytes, req_rank)
+            holders = self._live_holders(key, owner)
+            if len(holders) > 1 and self._policy.is_hot(key, self.topo.now):
+                return self._read_multi_source_async(key, nbytes, holders)
         handle = self.ranks[owner].read_entry_async(key, nbytes)
         handle.rank = owner
         if not handle.failed and self.ranks[owner].has_entry(key):
-            addr, pbytes = self._peer_span(owner, key, nbytes)
+            addr, pbytes = self._peer_span(owner, key,
+                                           self._collective_pbytes(nbytes))
             link = self.peer[owner].issue(PAGE_READ_ASYNC, addr, pbytes)
             self._charge_peer(owner, PAGE_READ_ASYNC, addr, pbytes,
                               link.wait_ns)
@@ -355,8 +514,57 @@ class ShardedTier:
             self._mirror(key, nbytes, owner)
         return handle
 
+    def _read_multi_source_async(self, key, nbytes: int,
+                                 holders: List[int]) -> TierHandle:
+        """Async collective restore: all holder fetches + link shares
+        ride one handle, completed only when every companion lands."""
+        handle: Optional[TierHandle] = None
+        ok: List[int] = []
+        comps: List[Tuple[str, int, object]] = []
+        for r in holders:
+            h = self.ranks[r].read_entry_async(key, nbytes)
+            h.rank = r
+            if h.failed:
+                if handle is None:
+                    handle = h        # placeholder until a holder works
+                continue
+            if handle is None or handle.failed:
+                handle = h
+            else:
+                handle.issue_wait_ns += h.issue_wait_ns
+                handle.done_ns = max(handle.done_ns, h.done_ns)
+                comps.append(("tier", r, h))
+            ok.append(r)
+        if not ok:
+            return handle             # every holder refused at issue
+        h_live = len(ok)
+        miss = max((int(nbytes) * (self.n_ranks - h_live))
+                   // self.n_ranks, 0)
+        if miss > 0:
+            share = -(-miss // h_live)
+            left = miss
+            for r in ok:
+                pb = min(share, left)
+                if pb <= 0:
+                    break
+                left -= pb
+                addr, pb = self._peer_span(r, key, pb)
+                link = self.peer[r].issue(PAGE_READ_ASYNC, addr, pb)
+                self._charge_peer(r, PAGE_READ_ASYNC, addr, pb,
+                                  link.wait_ns)
+                handle.issue_wait_ns += link.wait_ns
+                handle.done_ns = max(handle.done_ns, link.done_ns)
+                comps.append(("link", r, link))
+                self.shard_counters["peer_fetches"] += 1
+                self.shard_counters["peer_bytes"] += pb
+        if comps:
+            self._companions[id(handle)] = comps
+        self.shard_counters["multi_source_reads"] += 1
+        return handle
+
     def poll(self, handle: TierHandle) -> bool:
-        """True once the rank op *and* its peer-link transfer landed."""
+        """True once the rank op, its peer-link transfer, and any
+        multi-source companion fetches/transfers have all landed."""
         rank = getattr(handle, "rank", 0)
         done = self.ranks[rank].poll(handle)
         pend = self._peer_pending.get(id(handle))
@@ -367,6 +575,18 @@ class ShardedTier:
             else:
                 done = False
                 handle.retired = False
+        comps = self._companions.get(id(handle))
+        if comps is not None:
+            remaining = [
+                (kind, r, h) for kind, r, h in comps
+                if not (self.ranks[r].poll(h) if kind == "tier"
+                        else self.peer[r].poll(h))]
+            if remaining:
+                self._companions[id(handle)] = remaining
+                done = False
+                handle.retired = False
+            else:
+                del self._companions[id(handle)]
         return done
 
     def inflight_ops(self) -> int:
@@ -385,6 +605,10 @@ class ShardedTier:
         self._owner.pop(key, None)
         for r in range(self.n_ranks):
             self._peer_addr[r].pop(key, None)
+        self._rank_weight.pop(key, None)
+        self._rank_weight_t.pop(key, None)
+        if self._policy is not None:
+            self._policy.forget(key)
         return freed
 
     def has_entry(self, key) -> bool:
@@ -440,6 +664,10 @@ class ShardedTier:
                     continue
                 self._owner.pop(key, None)
                 self._holders.pop(key, None)
+                self._rank_weight.pop(key, None)
+                self._rank_weight_t.pop(key, None)
+                if self._policy is not None:
+                    self._policy.forget(key)
                 lost.append(key)
         return lost
 
@@ -467,8 +695,8 @@ class ShardedTier:
         Built on demand (one small dict per call): every ``CxlTier``
         counter key holds the sum over ranks, and the shard-specific
         keys (``peer_fetches``, ``peer_fetch_ns``, ``peer_bytes``,
-        ``mirror_writes``, ``rank_remaps``, ``peer_recoveries``) ride
-        alongside.
+        ``mirror_writes``, ``rank_remaps``, ``peer_recoveries``,
+        ``rehomes``, ``multi_source_reads``) ride alongside.
         """
         out: Dict[str, object] = {}
         for t in self.ranks:
@@ -548,6 +776,8 @@ class ShardedTier:
             "mirror_writes": c["mirror_writes"],
             "rank_remaps": c["rank_remaps"],
             "peer_recoveries": c["peer_recoveries"],
+            "rehomes": c["rehomes"],
+            "multi_source_reads": c["multi_source_reads"],
             "peer_trace_ops": [len(ops) for ops in self.peer_ops],
         }
         return snap

@@ -35,7 +35,19 @@ each entry onto the ports:
  * ``hotness`` — restore-frequency-weighted: entries start on the
    capacity (SSD) ports and hot entries promote to the DRAM port, with
    budget-driven demotion of the coldest resident back to the slowest
-   port (ICGMM-style placement across a heterogeneous expansion tier).
+   port;
+ * ``learned`` — same promote/demote mechanics, but the hot/cold verdict
+   comes from :class:`repro.sim.policy.LearnedPlacement` — an
+   ICGMM-style Gaussian mixture fit over per-entry reuse features
+   (reuse distance, recency, restore frequency, entry bytes) instead of
+   the fixed ``hot_promote_after`` counter; demotion victims rank by
+   posterior hot-probability.
+
+Both heat-driven policies optionally age their state
+(``TierConfig.heat_half_life_ns``): restore counts decay with a
+half-life, and fast-port residents whose decayed heat has cooled are
+demoted even without budget pressure — a once-hot entry cannot pin the
+DRAM port forever under churn.
 
 The tier records every op it charges (``ops``/``op_ns``); replaying that
 trace through ``repro.sim.engine.replay_page_trace`` from a fresh stream
@@ -62,13 +74,17 @@ from repro.sim.engine import (MAX_INFLIGHT_OPS, PAGE_ADVANCE, PAGE_PREFETCH,
                               PAGE_WRITE_ASYNC_FAULT, PAGE_WRITE_FAULT,
                               FaultSchedule, OpHandle, Topology)
 from repro.sim.media import resolve_media
+from repro.sim.policy import LearnedPlacement
 
 # Serving media bins -> simulator media parts (Table 1a). "ssd-fast" is the
 # Z-NAND part, "ssd-slow" commodity TLC NAND; any resolve_media spec
 # ("optane", "znand@2", ...) is also accepted verbatim.
 MEDIA_BINS = {"dram": "dram", "ssd-fast": "znand", "ssd-slow": "nand"}
 
-PLACEMENTS = ("striped", "hashed", "hotness")
+PLACEMENTS = ("striped", "hashed", "hotness", "learned")
+
+# placements whose restores feed heat state and can trigger migration
+HEAT_PLACEMENTS = ("hotness", "learned")
 
 
 def resolve_bin(spec: str) -> str:
@@ -126,9 +142,13 @@ class TierConfig:
     max_inflight: int = MAX_INFLIGHT_OPS
     # ---- multi-root-port topology -------------------------------------
     topology: Tuple[str, ...] = ()   # per-port media bins; () = single-port
-    placement: str = "striped"       # striped | hashed | hotness
+    placement: str = "striped"       # striped | hashed | hotness | learned
     hot_promote_after: int = 2       # restores before promotion (hotness)
     hot_budget_bytes: int = 256 << 10   # fast-port residency budget
+    # heat aging (hotness + learned): restore counts decay with this
+    # half-life (simulated ns) and cooled fast-port residents demote even
+    # without budget pressure. 0.0 = no aging (heat is a plain counter).
+    heat_half_life_ns: float = 0.0
     # ---- fault injection ----------------------------------------------
     # a repro.sim.engine.FaultSchedule the topology's ports consult:
     # degrade windows scale media service time, transient windows fail op
@@ -230,9 +250,13 @@ class CxlTier:
         # cursors run away while live_bytes stays flat.
         self._free: List[Dict[int, List[int]]] = [dict() for _ in range(n)]
         self._entry_counter = 0          # rotates the striping start port
-        # hotness-policy state
-        self._heat: Dict[object, int] = {}           # restore counts
+        # heat-policy state (hotness + learned)
+        self._heat: Dict[object, float] = {}         # (decayed) restores
+        self._heat_t: Dict[object, float] = {}       # decay timestamps
         self._fast_resident: Dict[object, int] = {}  # key -> bytes, LRU-ish
+        self._policy: Optional[LearnedPlacement] = (
+            LearnedPlacement(half_life_ns=config.heat_half_life_ns)
+            if config.placement == "learned" else None)
         self._down_ports: set = set()    # hot-removed (detected) ports
         self.lost_keys: List[object] = []  # invalidated, pending takeout
         self.last_entry_failed = False   # latest blocking entry op's fate
@@ -318,7 +342,7 @@ class CxlTier:
             return [alive[0]]
         if self.cfg.placement == "hashed":
             return [alive[_stable_hash(key) % n]]
-        if self.cfg.placement == "hotness":
+        if self.cfg.placement in HEAT_PLACEMENTS:
             # entries start on the capacity ports; the fast (DRAM) port is
             # reserved for promoted-hot entries (unless it is the only one)
             cands = [p for p in alive if p != self._fast_port] or [alive[0]]
@@ -491,8 +515,7 @@ class CxlTier:
         self.counters["read_bytes"] += int(nbytes)
         self.counters["read_ns"] += stall
         failed = self.last_entry_failed
-        if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
-            self._heat[key] = self._heat.get(key, 0) + 1
+        if self._note_restore(key, nbytes):
             self._rebalance(key, nbytes)
         self.last_entry_failed = failed  # migration charges don't mask it
         return stall
@@ -523,8 +546,7 @@ class CxlTier:
         self.counters["async_reads"] += 1
         self.counters["read_bytes"] += int(nbytes)
         self.counters["async_read_ns"] += handle.in_flight_ns
-        if self.cfg.placement == "hotness" and self.topo.n_ports > 1:
-            self._heat[key] = self._heat.get(key, 0) + 1
+        if self._note_restore(key, nbytes):
             self._rebalance(key, nbytes)
         return handle
 
@@ -579,7 +601,10 @@ class CxlTier:
                 bucket.append(base)
             freed += length
         self._heat.pop(key, None)
+        self._heat_t.pop(key, None)
         self._fast_resident.pop(key, None)
+        if self._policy is not None:
+            self._policy.forget(key)
         self.counters["frees"] += 1
         self.counters["freed_bytes"] += freed
         return freed
@@ -638,7 +663,10 @@ class CxlTier:
                 if p not in self._down_ports:
                     self._free[p].setdefault(length // pg, []).append(base)
             self._heat.pop(key, None)
+            self._heat_t.pop(key, None)
             self._fast_resident.pop(key, None)
+            if self._policy is not None:
+                self._policy.forget(key)
             lost.append(key)
             self.counters["lost_entries"] += 1
             self.counters["lost_bytes"] += nbytes
@@ -670,7 +698,7 @@ class CxlTier:
             self._port_mults = mults
             old_fast = self._fast_port
             self._recompute_hot_ports()
-            if (self.cfg.placement == "hotness"
+            if (self.cfg.placement in HEAT_PLACEMENTS
                     and self._fast_port != old_fast
                     and old_fast not in self._down_ports):
                 self._demote_all_fast(old_fast)
@@ -683,44 +711,114 @@ class CxlTier:
         return out
 
     def _demote_all_fast(self, old_fast: int) -> None:
-        """Evacuate hotness residents off a demoted (degraded) fast port:
-        each is read off its current segments and rewritten onto the
-        (healthy) slow port — standard demotion, charged like any other
-        migration; the entries re-earn promotion onto the new fast port
-        through restore heat."""
+        """Evacuate heat-policy residents off a demoted (degraded) fast
+        port: each is read off its current segments and rewritten onto
+        the (healthy) slow port — standard demotion, charged like any
+        other migration; the entries re-earn promotion onto the new fast
+        port through restore heat."""
         for victim in list(self._fast_resident):
-            vbytes = self._fast_resident.pop(victim)
-            for p, addr, cap in self._segments.get(victim, []):
-                self.counters["migrate_ns"] += self._charge(
-                    p, PAGE_READ, addr, min(cap, vbytes))
-            moved = self._allocate(victim, vbytes,
-                                   ports=[self._slow_port])
-            for _, addr, cap in moved:
-                self.counters["migrate_ns"] += self._charge(
-                    self._slow_port, PAGE_WRITE, addr, min(cap, vbytes))
-            self._heat[victim] = 0
-            self.counters["demotions"] += 1
+            self._demote(victim)
 
-    # ------------------------------------------------ hotness rebalancing
+    # --------------------------------------------- heat state (rebalancing)
+    def _now_ns(self) -> float:
+        """Topology-wide simulated clock (the slowest port's stream)."""
+        return max(p.now for p in self.topo.ports)
+
+    def _decayed_heat(self, key, now_ns: Optional[float] = None) -> float:
+        """Restore heat aged by ``heat_half_life_ns`` (0 = plain count)."""
+        h = self._heat.get(key, 0.0)
+        hl = self.cfg.heat_half_life_ns
+        if h <= 0.0 or hl <= 0.0:
+            return h
+        if now_ns is None:
+            now_ns = self._now_ns()
+        dt = max(0.0, now_ns - self._heat_t.get(key, 0.0))
+        return h * 0.5 ** (dt / hl)
+
+    def _note_restore(self, key, nbytes: int) -> bool:
+        """Fold one restore into the heat state; True when the active
+        placement rebalances on restores (hotness/learned, multi-port)."""
+        if self.topo.n_ports <= 1 \
+                or self.cfg.placement not in HEAT_PLACEMENTS:
+            return False
+        now = self._now_ns()
+        self._heat[key] = self._decayed_heat(key, now) + 1.0
+        self._heat_t[key] = now
+        if self._policy is not None:
+            self._policy.observe(key, now, int(nbytes))
+        return True
+
+    def _victim_rank(self, key, now_ns: float) -> float:
+        """Demotion ranking — coldest first. Learned placement ranks by
+        posterior hot-probability, the counter policy by decayed heat."""
+        if self._policy is not None and self._policy.fitted:
+            return self._policy.score(key, now_ns)
+        return self._decayed_heat(key, now_ns)
+
+    def _demote(self, victim) -> None:
+        """Migrate one fast-port resident back to the slow port.
+
+        Charges a read off the segments' actual ports (belt and braces
+        with the ``_allocate`` bookkeeping: a segment address is only
+        meaningful on its own port's bump space) plus a write onto the
+        slowest port; the key keeps a valid mapping at all times."""
+        vbytes = self._fast_resident.pop(victim)
+        for p, addr, cap in self._segments.get(victim, []):
+            self.counters["migrate_ns"] += self._charge(
+                p, PAGE_READ, addr, min(cap, vbytes))
+        moved = self._allocate(victim, vbytes, ports=[self._slow_port])
+        for _, addr, cap in moved:
+            self.counters["migrate_ns"] += self._charge(
+                self._slow_port, PAGE_WRITE, addr, min(cap, vbytes))
+        self._heat[victim] = 0.0         # demoted: re-earn promotion
+        self.counters["demotions"] += 1
+
+    def _cool_fast_residents(self, now_ns: float, exclude=None) -> None:
+        """Aging sweep: demote fast residents whose heat has decayed cold
+        — a once-hot entry cannot pin the fast port forever under churn.
+        Only runs with ``heat_half_life_ns`` set (otherwise heat never
+        cools and the sweep would be a per-restore no-op scan)."""
+        if self.cfg.heat_half_life_ns <= 0.0:
+            return
+        for k in list(self._fast_resident):
+            if k == exclude:
+                continue
+            cold = self._decayed_heat(k, now_ns) < 1.0
+            if cold and self._policy is not None:
+                cold = not self._policy.is_hot(k, now_ns)
+            if cold:
+                self._demote(k)
+
     def _rebalance(self, key, nbytes: int) -> None:
         """Promote a hot entry to the fast port; demote over-budget cold.
 
-        Promotion charges only the write onto the fast port (the entry's
-        pages were just demand-read into GPU memory); each demotion
-        charges a read off the fast port plus a write onto the slowest
-        port. Segments are swapped atomically after the charges, so every
-        key keeps a valid mapping at all times — no entry is ever
-        stranded mid-migration.
+        The hot verdict is the active policy's: decayed heat against
+        ``hot_promote_after`` (hotness) or the learned GMM's posterior
+        (:meth:`repro.sim.policy.LearnedPlacement.is_hot`). Promotion
+        charges only the write onto the fast port (the entry's pages
+        were just demand-read into GPU memory); each demotion charges a
+        read off the fast port plus a write onto the slowest port.
+        Segments are swapped atomically after the charges, so every key
+        keeps a valid mapping at all times — no entry is ever stranded
+        mid-migration. With heat aging enabled, every rebalance also
+        sweeps cooled residents off the fast port.
         """
         if self._fast_port == self._slow_port:
             return                       # homogeneous topology: nothing to do
+        now = self._now_ns()
         segs = self._segments.get(key, [])
         on_fast = all(p == self._fast_port for p, _, _ in segs)
         if on_fast:
             self._fast_resident[key] = max(self._fast_resident.get(key, 0),
                                            int(nbytes))
+            self._cool_fast_residents(now, exclude=key)
             return
-        if self._heat.get(key, 0) < self.cfg.hot_promote_after:
+        if self._policy is not None:
+            hot = self._policy.is_hot(key, now)
+        else:
+            hot = self._decayed_heat(key, now) >= self.cfg.hot_promote_after
+        if not hot:
+            self._cool_fast_residents(now, exclude=key)
             return
         new = self._allocate(key, nbytes, ports=[self._fast_port])
         for _, addr, cap in new:
@@ -732,20 +830,9 @@ class CxlTier:
         while sum(self._fast_resident.values()) > budget \
                 and len(self._fast_resident) > 1:
             victim = min((k for k in self._fast_resident if k != key),
-                         key=lambda k: self._heat.get(k, 0))
-            vbytes = self._fast_resident.pop(victim)
-            # charge the pull-back on the segments' actual ports (belt
-            # and braces with the _allocate bookkeeping above: a segment
-            # address is only meaningful on its own port's bump space)
-            for p, addr, cap in self._segments.get(victim, []):
-                self.counters["migrate_ns"] += self._charge(
-                    p, PAGE_READ, addr, min(cap, vbytes))
-            moved = self._allocate(victim, vbytes, ports=[self._slow_port])
-            for _, addr, cap in moved:
-                self.counters["migrate_ns"] += self._charge(
-                    self._slow_port, PAGE_WRITE, addr, min(cap, vbytes))
-            self._heat[victim] = 0       # demoted: re-earn promotion
-            self.counters["demotions"] += 1
+                         key=lambda k: self._victim_rank(k, now))
+            self._demote(victim)
+        self._cool_fast_residents(now, exclude=key)
 
     # ---------------------------------------------------------------- QoS
     def admit_store(self) -> bool:

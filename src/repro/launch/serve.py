@@ -12,8 +12,10 @@ config object rather than a loose keyword bag.
 prefix restores are charged against the simulated endpoint and the
 restore stall / SR hit rate are reported alongside throughput.
 ``--cxl-topology dram,ssd-fast`` attaches a multi-root-port tier
-instead (``--cxl-placement`` picks striped / hashed / hotness) and adds
-a per-port stats line. ``--cxl-async`` switches the tier to
+instead (``--cxl-placement`` picks striped / hashed / hotness /
+learned — learned drives promotion by the GMM reuse classifier — and
+``--cxl-heat-half-life-ns`` ages entry heat so cold entries demote) and
+adds a per-port stats line. ``--cxl-async`` switches the tier to
 completion-based async I/O (restores overlap decode instead of stalling
 the batch) and ``--preempt-policy swap|recompute`` enables preemptive
 scheduling under slot pressure; both add a scheduler stats line.
@@ -252,8 +254,14 @@ def main() -> None:
                          "media bins (e.g. 'dram,ssd-fast,ssd-slow'); "
                          "overrides --cxl-media")
     ap.add_argument("--cxl-placement", default=_DEF.tier_placement,
-                    choices=["striped", "hashed", "hotness"],
-                    help="entry placement across the topology's ports")
+                    choices=["striped", "hashed", "hotness", "learned"],
+                    help="entry placement across the topology's ports "
+                         "(learned = GMM reuse classifier)")
+    ap.add_argument("--cxl-heat-half-life-ns", type=float,
+                    default=_DEF.tier_heat_half_life_ns,
+                    help="entry-heat decay half-life in simulated ns "
+                         "(0 = heat never decays); applies to the "
+                         "hotness and learned placements")
     ap.add_argument("--kv-quant", default=_DEF.kv_quant,
                     choices=["none", "int8"],
                     help="KV page format: int8 stores per-page-scaled "
@@ -323,7 +331,9 @@ def main() -> None:
         cxl_async=args.cxl_async, preempt_policy=args.preempt_policy,
         admit_mode=args.admit_mode, tier_media=args.cxl_media,
         tier_topology=topology,
-        tier_placement=args.cxl_placement, tier_sr=not args.cxl_sr_off,
+        tier_placement=args.cxl_placement,
+        tier_heat_half_life_ns=args.cxl_heat_half_life_ns,
+        tier_sr=not args.cxl_sr_off,
         tier_faults=tier_faults, fault_seed=args.fault_seed, tp=args.tp)
     load = None
     if args.load:

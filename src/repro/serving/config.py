@@ -23,7 +23,7 @@ from typing import Optional, Tuple
 # a config stays import-light; the owning modules re-validate on use.
 _PREEMPT_POLICIES = ("none", "swap", "recompute")
 _ADMIT_MODES = ("continuous", "closed")
-_PLACEMENTS = ("striped", "hashed", "hotness")
+_PLACEMENTS = ("striped", "hashed", "hotness", "learned")
 _FAULT_KINDS = ("degrade", "transient", "hot_remove")
 # mirrored from repro.models.kv_quant.KV_QUANT_MODES ("fp8" is reserved —
 # spelled here so the error message can say so without importing jax)
@@ -64,7 +64,13 @@ class ServeConfig:
      * ``tier_topology`` — per-port media bins; non-empty overrides
        ``tier_media`` with a multi-root-port tier.
      * ``tier_placement`` / ``tier_sr`` — placement policy and the
-       speculative-read engine.
+       speculative-read engine. ``"learned"`` drives promotion /
+       demotion (and, sharded, cross-rank re-homing) from a
+       :class:`repro.sim.policy.LearnedPlacement` GMM instead of the
+       ``hotness`` restore counter.
+     * ``tier_heat_half_life_ns`` — heat aging half-life for the
+       ``hotness`` / ``learned`` policies (0 = no aging; a once-hot
+       entry then pins its fast port until budget pressure evicts it).
      * ``tier_step_ns`` — simulated ns per engine tick.
      * ``tier_faults`` — declarative fault events, stdlib tuples of
        ``("degrade", t_ns, port, mult[, until_ns])``,
@@ -104,6 +110,7 @@ class ServeConfig:
     tier_media: str = ""
     tier_topology: Tuple[str, ...] = ()
     tier_placement: str = "striped"
+    tier_heat_half_life_ns: float = 0.0
     tier_sr: bool = True
     tier_step_ns: float = 100_000.0
     tier_faults: Tuple[tuple, ...] = ()
@@ -139,6 +146,9 @@ class ServeConfig:
             raise ValueError(f"unknown tier_placement "
                              f"{self.tier_placement!r} (expected one of "
                              f"{_PLACEMENTS})")
+        if self.tier_heat_half_life_ns < 0:
+            raise ValueError("tier_heat_half_life_ns must be >= 0 "
+                             f"(got {self.tier_heat_half_life_ns})")
         if self.legacy_host_path and (self.cxl_async
                                       or self.preempt_policy != "none"):
             raise ValueError("the legacy host path is the frozen baseline: "
@@ -212,6 +222,7 @@ class ServeConfig:
         if self.tier_topology:
             return TierConfig(topology=tuple(self.tier_topology),
                               placement=self.tier_placement,
+                              heat_half_life_ns=self.tier_heat_half_life_ns,
                               sr_enabled=self.tier_sr, faults=faults)
         return TierConfig(media=self.tier_media, sr_enabled=self.tier_sr,
                           faults=faults)

@@ -1015,6 +1015,9 @@ class ServingEngine:
         self.stats["tier_ports"] = self.tier.port_stats()
         self.stats["flushes_deferred"] = self.flusher.deferred
         tc = self.tier.counters
+        self.stats["tier_promotions"] = tc["promotions"]
+        self.stats["tier_demotions"] = tc["demotions"]
+        self.stats["tier_migrate_ns"] = tc["migrate_ns"]
         self.stats["tier_fault_ops"] = tc["fault_ops"]
         self.stats["tier_lost_entries"] = tc["lost_entries"]
         self.stats["tier_lost_bytes"] = tc["lost_bytes"]
@@ -1029,6 +1032,8 @@ class ServingEngine:
             self.stats["tier_peer_fetch_ns"] = tc["peer_fetch_ns"]
             self.stats["tier_rank_remaps"] = tc["rank_remaps"]
             self.stats["tier_peer_recoveries"] = tc["peer_recoveries"]
+            self.stats["tier_rehomes"] = tc["rehomes"]
+            self.stats["tier_multi_source_reads"] = tc["multi_source_reads"]
 
     def _fault_sweep(self) -> None:
         """Fold newly-fired tier faults into serving state.

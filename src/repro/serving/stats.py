@@ -116,6 +116,13 @@ class EngineStats(_StatsMapping):
     # refreshed live every tick (tier.port_stats() is an in-place
     # updated view, so this is allocation-free).
     tier_ports: list = dataclasses.field(default_factory=list)
+    # placement telemetry (multi-port tiers): entries migrated onto /
+    # off the fast ports by the placement policy (``hotness`` counter or
+    # the ``learned`` GMM — see repro.sim.policy) and the simulated ns
+    # those migrations charged.
+    tier_promotions: int = 0
+    tier_demotions: int = 0
+    tier_migrate_ns: float = 0.0
     # request-lifecycle scheduler telemetry: preempted slots, page bytes
     # swapped out/in through the tier, total async restore in-flight ns
     # and the fraction hidden behind decode (1.0 = fully overlapped),
@@ -149,6 +156,11 @@ class EngineStats(_StatsMapping):
     tier_peer_fetch_ns: float = 0.0
     tier_rank_remaps: int = 0
     tier_peer_recoveries: int = 0
+    # learned cross-rank homing (zero unless placement="learned" on a
+    # sharded tier): entries re-homed to their dominant requester rank,
+    # and hot restores served multi-source from every live holder.
+    tier_rehomes: int = 0
+    tier_multi_source_reads: int = 0
     # clocks: the tier topology's simulated time at the last tick, and
     # the engine's own tick clock (tier_step_ns per working tick plus
     # open-loop idle jumps — requests per simulated second and every SLO

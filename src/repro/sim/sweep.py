@@ -216,6 +216,93 @@ def bench(scenarios: Iterable[Scenario], *, compare: bool = True,
     return out
 
 
+# page-trace closed-form scenarios (the ``page_trace`` section of
+# BENCH_sim.json): synthetic tier-style op traces priced by both the
+# vectorized closed form and the scalar oracle. The async configs are
+# the ones the in-flight-cap issue-stall recurrence vectorizes; they
+# carry the >= 5x wall-time speedup gate.
+PAGE_TRACE_SCENARIOS = {
+    "blocking-1port": {"ports": ("dram",), "async_frac": 0.0},
+    "async-1port": {"ports": ("dram",), "async_frac": 0.6},
+    "async-3port": {"ports": ("dram", "dram@2", "dram@4"),
+                    "async_frac": 0.6},
+}
+
+
+def _synth_page_trace(ports: Sequence[str], n_ops: int,
+                      async_frac: float, seed: int = 0) -> List[tuple]:
+    """Deterministic synthetic page trace in ``CxlTier.ops`` format:
+    ``(kind, addr, nbytes)`` tuples, port-tagged 4-tuples when more than
+    one port is given (advance records use port -1, dt in nbytes)."""
+    import random
+    rng = random.Random(seed)
+    tagged = len(ports) > 1
+    ops: List[tuple] = []
+    base = [0] * len(ports)
+    for _ in range(n_ops):
+        r = rng.random()
+        if r < 0.10:
+            rec = (scalar_engine.PAGE_ADVANCE, 0, rng.randrange(500, 3000))
+            ops.append((-1,) + rec if tagged else rec)
+            continue
+        port = rng.randrange(len(ports))
+        nbytes = rng.randrange(1 << 10, 48 << 10)
+        if r < 0.15:
+            kind = scalar_engine.PAGE_PREFETCH
+        elif r < 0.55:
+            kind = scalar_engine.PAGE_READ_ASYNC \
+                if rng.random() < async_frac else scalar_engine.PAGE_READ
+        else:
+            kind = scalar_engine.PAGE_WRITE_ASYNC \
+                if rng.random() < async_frac else scalar_engine.PAGE_WRITE
+        addr = base[port]
+        base[port] += -(-nbytes // 4096) * 4096
+        rec = (kind, addr, nbytes)
+        ops.append((port,) + rec if tagged else rec)
+    return ops
+
+
+def page_trace_bench(n_ops: int = 4000) -> Dict:
+    """Closed-form vs scalar-oracle page-trace replay (``page_trace``
+    section of BENCH_sim.json).
+
+    Per scenario: both engines price one synthetic trace; gates per-op
+    max rel err <= 1% everywhere and a >= 5x wall-time speedup on the
+    async configs (the blocking config collapses to pure algebra, so
+    its speedup is reported but not gated).
+    """
+    scens = {}
+    for name, spec in PAGE_TRACE_SCENARIOS.items():
+        ports = spec["ports"]
+        ops = _synth_page_trace(ports, n_ops, spec["async_frac"])
+        tagged = len(ports) > 1
+        t0 = time.perf_counter()
+        vec = vector_engine.page_trace_closed_form(
+            ops, list(ports) if tagged else ports[0])
+        vector_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        oracle = scalar_engine.replay_page_trace(
+            ops, media=ports[0], topology=list(ports) if tagged else None)
+        scalar_s = time.perf_counter() - t0
+        rel = float(np.max(np.abs(vec - oracle)
+                           / np.maximum(np.abs(oracle), 1e-9)))
+        speedup = scalar_s / max(vector_s, 1e-9)
+        is_async = spec["async_frac"] > 0
+        scens[name] = {
+            "n_ops": len(ops),
+            "ports": list(ports),
+            "async": is_async,
+            "max_rel_err": rel,
+            "vector_s": round(vector_s, 5),
+            "scalar_s": round(scalar_s, 5),
+            "speedup": round(speedup, 1),
+            "pass": bool(rel <= 0.01
+                         and (speedup >= 5.0 if is_async else True)),
+        }
+    return {"scenarios": scens, "tolerance": 0.01, "speedup_floor": 5.0,
+            "pass": all(s["pass"] for s in scens.values())}
+
+
 def category_means(rows: Dict[str, Dict], baseline_config: str = "gpu-dram"
                    ) -> Dict[str, Dict[str, float]]:
     """Per-config mean slowdown vs the baseline config, by workload

@@ -1079,31 +1079,138 @@ def run(config: str, workload: str, media_name="dram", *,
 # Closed-form page-trace latencies (DRAM-class EP)
 # ---------------------------------------------------------------------------
 
-def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
-                           req_bytes: int = 256) -> np.ndarray:
-    """Closed-form per-op latencies for a blocking page trace on
-    DRAM-class EPs — the vectorized cross-check for the serving tier's
-    ``dram`` media bin and for the DRAM-EP lanes of a multi-port topology.
+def _chan_store(ch, nc, addr, w, s, sw, rb):
+    """Exact EP-channel busy updates for one deterministic-store page op.
 
-    Valid because a *blocking* stream on a DRAM EP never queues: every
-    demand request finds its transaction slot and channel free (the next
-    request only issues after the previous one returned, and fire-and-
-    forget writes complete EP-side before the stream's clock catches up),
-    so each 64B CXL.mem request costs exactly
+    A fire-and-forget store completes GPU-side at ``GPU_MEM_NS`` but its
+    EP-side media write still occupies the owning channel
+    (``Endpoint._media_fetch`` sets ``chan_busy[c] = max(arrival, busy)
+    + write_ns + xfer``). ``ch`` is the port's channel-busy vector,
+    ``s`` the op's service-walk start, ``sw`` the EP-side write service
+    time. Requests walk ``addr`` in ``rb``-byte steps at ``GPU_MEM_NS``
+    cadence, cycling channels with period ``nc / gcd(rb // BLOCK, nc)``;
+    only each channel's last hit persists unless hits chain (service
+    time exceeding the revisit gap), which falls back to the exact
+    per-hit recurrence."""
+    half = CXL_RTT_NS / 2.0
+    blk = Endpoint.BLOCK
+    if rb % blk == 0:
+        stride = rb // blk
+        per = nc // math.gcd(stride, nc)
+        gap = per * GPU_MEM_NS
+        c0 = (addr // blk) % nc
+        for j in range(w if w < per else per):
+            c = (c0 + j * stride) % nc
+            hits = (w - 1 - j) // per + 1
+            a0 = s + j * GPU_MEM_NS + half
+            r = ch[c]
+            b = (r if r > a0 else a0) + sw
+            if hits > 1:
+                if b <= a0 + gap:       # no chaining: last hit wins
+                    b = a0 + (hits - 1) * gap + sw
+                else:                   # chained hits: exact recurrence
+                    for m in range(1, hits):
+                        a = a0 + m * gap
+                        b = (b if b > a else a) + sw
+            ch[c] = b
+    else:                               # irregular stride: walk requests
+        for i in range(w):
+            c = ((addr + i * rb) // blk) % nc
+            a = s + i * GPU_MEM_NS + half
+            r = ch[c]
+            ch[c] = (r if r > a else a) + sw
+
+
+def _chan_load_wait(ch, nc, addr, w, s, dreq, rb):
+    """Exact cumulative queueing a demand-read page op pays to residual
+    channel occupancy left by fire-and-forget stores.
+
+    Each request arrives ``CXL_RTT/2`` after its cursor slot and queues
+    behind ``chan_busy`` (``Endpoint._media_fetch``); a wait shifts every
+    later request of the op by the same amount. Only a channel's first
+    hit can wait — the read's own fetch then re-stamps the channel with
+    a completion the serialized walk has already passed, so touched
+    channels are cleared. Returns the total shift (ns) to add to the
+    op's service time."""
+    half = CXL_RTT_NS / 2.0
+    blk = Endpoint.BLOCK
+    shift = 0.0
+    if rb % blk == 0:
+        stride = rb // blk
+        per = nc // math.gcd(stride, nc)
+        c0 = (addr // blk) % nc
+        for j in range(w if w < per else per):
+            c = (c0 + j * stride) % nc
+            r = ch[c]
+            if r > 0.0:
+                a = s + shift + j * dreq + half
+                if r > a:
+                    shift += r - a
+                ch[c] = 0.0
+    else:
+        for i in range(w):
+            c = ((addr + i * rb) // blk) % nc
+            r = ch[c]
+            if r > 0.0:
+                a = s + shift + i * dreq + half
+                if r > a:
+                    shift += r - a
+                ch[c] = 0.0
+    return shift
+
+
+def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
+                           req_bytes: int = 256,
+                           max_inflight: int = se.MAX_INFLIGHT_OPS
+                           ) -> np.ndarray:
+    """Closed-form per-op latencies for a page trace on DRAM-class EPs —
+    the vectorized cross-check for the serving tier's ``dram`` media bin
+    and for the DRAM-EP lanes of a multi-port topology. Covers blocking
+    *and* async (``issue``/``poll``) op kinds; fault-annotated kinds are
+    rejected (see below).
+
+    Valid because a stream on a DRAM EP never queues inside the
+    controller: every demand request finds its transaction slot free and
+    the staging stack empty (DRAM DevLoad is always LIGHT), so each 64B
+    CXL.mem request costs exactly
 
         read:   CXL_RTT + read_ns + xfer(64B)
         write:  GPU_MEM_NS              (deterministic store, dual write)
                 CXL_RTT + write_ns + xfer(64B)   (ds disabled)
 
     and a page op of ``ceil(nbytes / req_bytes)`` requests is that many
-    multiples. The same per-op algebra holds per *port* of a multi-port
-    topology: DRAM lanes never queue, so each lane's ops cost the same
-    whether or not other lanes run concurrently — pass port-tagged
-    ``(port, kind, addr, nbytes)`` ops plus a sequence of per-port media
-    specs as ``media_name``. Prefetch and advance ops are free on the
-    demand path (SR never engages on a DRAM EP). Raises ``ValueError``
-    for media with internal tasks (any lane) — those need the event loop,
-    not a closed form.
+    multiples — plus one exactly-modeled EP-side coupling: on scaled
+    DRAM bins where a deterministic store's media write outlasts its
+    GPU-side completion (``write_ns + xfer > GPU_MEM_NS``, e.g.
+    ``dram@4``), the fire-and-forget write leaves residual channel
+    occupancy that a closely-following demand read on the same channels
+    queues behind (``Endpoint.chan_busy``). The closed form tracks
+    per-port channel busy state and charges those waits exactly
+    (:func:`_chan_store` / :func:`_chan_load_wait`, O(channels) per
+    affected op); bins where the residual cannot outlive the request
+    cadence skip the bookkeeping entirely. The same per-op algebra
+    holds per *port* of a multi-port topology: ports front independent
+    EPs, so each lane's ops cost the same whether or not other lanes
+    run concurrently — pass port-tagged ``(port, kind, addr, nbytes)``
+    ops plus a sequence of per-port media specs as ``media_name``.
+
+    Blocking-only traces with no channel coupling collapse to pure
+    per-op algebra (no clock state at all). Otherwise the scan keeps two
+    scalars of state per port — the stream clock ``t`` and the service
+    cursor ``u`` — plus, for async kinds, the in-flight cap's
+    issue-stall recurrence ``wait_m = max(0, d_{m-cap} - t)`` against
+    the port's (monotone) async completion times ``d``; request costs,
+    per-port async ordinals and cap-lag taps are all precomputed
+    vectorized, leaving an O(1)-per-op scan (no per-request controller
+    walk, no heaps — the scalar oracle pays both).
+
+    Prefetch ops are free on the demand path (SR never engages on a DRAM
+    EP); advance ops carry ``dt`` ns in the nbytes slot and move the
+    clocks (syncing ports first, as ``Topology.advance`` does). Raises
+    ``ValueError`` for media with internal tasks on any lane (those need
+    the event loop) and for fault-annotated kinds (retry/backoff prices
+    off the recording run's FaultSchedule — replay those with
+    ``replay_page_trace(..., faults=...)``).
 
     Args:
         ops: ``(kind, addr, nbytes)`` tuples, or port-tagged 4-tuples.
@@ -1111,48 +1218,55 @@ def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
             port-tagged ops.
         ds: deterministic store enabled (writes bill at GPU-memory speed).
         req_bytes: bytes per CXL.mem request within a page op.
+        max_inflight: per-port async in-flight cap the trace was recorded
+            under (``TierConfig.max_inflight``).
 
     Returns:
-        Per-op latencies (ns), aligned with ``ops``.
+        Per-op latencies (ns), aligned with ``ops`` — completion latency
+        for blocking ops, issue-stall wait for async ops, 0 for
+        prefetch/advance (matching ``replay_page_trace``).
     """
+    if max_inflight < 1:
+        raise ValueError("max_inflight must be >= 1")
     if isinstance(media_name, (list, tuple)):
         medias = [resolve_media(m) for m in media_name]
         ops = list(ops)
         ports = np.asarray([p for p, _, _, _ in ops], np.int64)
         rest = [(k, a, n) for _, k, a, n in ops]
+        tagged = True
     else:
         medias = [resolve_media(media_name)]
         rest = list(ops)
         ports = np.zeros(len(rest), np.int64)
+        tagged = False
     for media in medias:
         # lockstep with Endpoint.is_dram: DRAM-class = no internal tasks
-        # (scaled variants like "dram@2" stay valid — the blocking stream
-        # never queues regardless of the latency multiplier)
+        # (scaled variants like "dram@2" stay valid — the stream never
+        # queues in the controller regardless of the latency multiplier)
         if media.gc_every_bytes != 0:
             raise ValueError(f"{media.name}: closed form needs a "
                              "DRAM-class EP")
     kinds = np.asarray([k for k, _, _ in rest], np.int64)
-    if np.any((kinds == se.PAGE_READ_ASYNC) | (kinds == se.PAGE_WRITE_ASYNC)):
-        # async issue stalls depend on the in-flight set at issue time —
-        # event-loop state the per-op algebra cannot reconstruct
-        raise ValueError("closed form covers blocking page traces only; "
-                         "async op kinds need the event-loop oracle "
-                         "(replay_page_trace)")
     if np.any(np.isin(kinds, se.PAGE_FAULT_KINDS)):
         # fault-annotated ops price retry/backoff (and downed-port zero
         # charges) off the recording run's FaultSchedule — event-loop
-        # state again, not per-op algebra
+        # state the per-op algebra cannot see
         raise ValueError("closed form cannot price fault-annotated page "
                          "ops; replay them with replay_page_trace(..., "
                          "faults=<the recording run's FaultSchedule>)")
     known = np.isin(kinds, (se.PAGE_ADVANCE, se.PAGE_READ, se.PAGE_WRITE,
-                            se.PAGE_PREFETCH))
+                            se.PAGE_PREFETCH, se.PAGE_READ_ASYNC,
+                            se.PAGE_WRITE_ASYNC))
     if not np.all(known):
         bad = sorted(set(kinds[~known].tolist()))
         raise ValueError(f"unknown page-op kind(s) {bad} in trace; known "
-                         "blocking kinds are PAGE_ADVANCE/PAGE_READ/"
-                         "PAGE_WRITE/PAGE_PREFETCH")
-    nbytes = np.asarray([n for _, _, n in rest], np.int64)
+                         "kinds are PAGE_ADVANCE/PAGE_READ/PAGE_WRITE/"
+                         "PAGE_PREFETCH/PAGE_READ_ASYNC/PAGE_WRITE_ASYNC "
+                         "(fault-annotated kinds need replay_page_trace)")
+    n = len(kinds)
+    if n == 0:
+        return np.zeros(0, np.float64)
+    nbytes = np.asarray([nb for _, _, nb in rest], np.int64)
     n_reqs = -(-nbytes // req_bytes)
     line = 64                      # CXL.mem request granularity (MemRd)
     read_req = np.asarray(
@@ -1161,9 +1275,111 @@ def page_trace_closed_form(ops, media_name="dram", *, ds: bool = True,
         [GPU_MEM_NS if ds else CXL_RTT_NS + m.write_ns + m.xfer_ns(line)
          for m in medias])
     lane = np.clip(ports, 0, len(medias) - 1)   # advance records use -1
-    lat = np.zeros(len(kinds), np.float64)
-    lat[kinds == se.PAGE_READ] = \
-        (n_reqs * read_req[lane])[kinds == se.PAGE_READ]
-    lat[kinds == se.PAGE_WRITE] = \
-        (n_reqs * write_req[lane])[kinds == se.PAGE_WRITE]
-    return lat
+    is_read = (kinds == se.PAGE_READ) | (kinds == se.PAGE_READ_ASYNC)
+    is_write = (kinds == se.PAGE_WRITE) | (kinds == se.PAGE_WRITE_ASYNC)
+    dur = np.zeros(n, np.float64)              # service ns per op
+    dur[is_read] = (n_reqs * read_req[lane])[is_read]
+    dur[is_write] = (n_reqs * write_req[lane])[is_write]
+    is_async = (kinds == se.PAGE_READ_ASYNC) | (kinds == se.PAGE_WRITE_ASYNC)
+    # EP-channel residual coupling: a deterministic store's media write
+    # can outlive the GPU-side completion only when its service time
+    # exceeds the request cadence — then reads on the same lane can
+    # queue behind it and the scan must track channel state
+    chan_model = [ds and m.write_ns + m.xfer_ns(line) > GPU_MEM_NS
+                  for m in medias]
+    n_ports = len(medias)
+    needs_chan = any(
+        chan_model[p] and bool((is_write & (lane == p)).any())
+        and bool((is_read & (lane == p)).any()) for p in range(n_ports))
+    if not is_async.any() and not needs_chan:
+        # blocking fast path: the stream clock always catches the service
+        # cursor (t == u after every blocking op), so latency == service
+        # time per op — no clock state needed at all
+        return np.where((kinds == se.PAGE_READ) | (kinds == se.PAGE_WRITE),
+                        dur, 0.0)
+
+    # --- scan path: exact O(1)-state scan over precomputed costs ------
+    # per-port async ordinals + cap-lag taps, vectorized: async op number
+    # m on a port stalls until its (m - cap)-th predecessor completes
+    # (completion times are monotone, so sorted(inflight)[len-cap] in
+    # PageStream.issue is exactly d[m - cap])
+    ordv = np.zeros(n, np.int64)
+    n_async_p = [0] * n_ports
+    for p in range(n_ports):
+        mask = is_async & (lane == p)
+        cnt = int(mask.sum())
+        ordv[mask] = np.arange(cnt)
+        n_async_p[p] = cnt
+    tap = ordv - max_inflight       # < 0: cap slack, never stalls
+    dur[kinds == se.PAGE_ADVANCE] = \
+        nbytes[kinds == se.PAGE_ADVANCE].astype(np.float64)
+    adv, rd, wr, pre = (se.PAGE_ADVANCE, se.PAGE_READ, se.PAGE_WRITE,
+                        se.PAGE_PREFETCH)
+    kl = kinds.tolist()
+    ll = lane.tolist()
+    dl = dur.tolist()
+    ol = ordv.tolist()
+    tl = tap.tolist()
+    al = [a for _, a, _ in rest]    # request walks need base addresses
+    wn = n_reqs.tolist()
+    sw_l = [m.write_ns + m.xfer_ns(line) for m in medias]
+    rr_l = read_req.tolist()
+    chs = [[0.0] * m.channels if chan_model[p] else None
+           for p, m in enumerate(medias)]
+    t = [0.0] * n_ports             # stream clocks
+    u = [0.0] * n_ports             # service cursors (busy_until)
+    adone = [[0.0] * c for c in n_async_p]   # async completion times
+    lat = [0.0] * n
+    rda = se.PAGE_READ_ASYNC
+    for e in range(n):
+        k = kl[e]
+        if k == adv:
+            # Topology.advance: sync every stream clock to the global
+            # max, then advance by dt (single-port traces degenerate to
+            # t += dt); service cursors are untouched
+            g = max(t) + dl[e]
+            for p in range(n_ports):
+                t[p] = g
+        elif k == pre:
+            continue                # free on a DRAM EP, no state change
+        elif k == rd or k == wr:
+            p = ll[e]
+            tp, up = t[p], u[p]
+            s = tp if tp > up else up
+            d = dl[e]
+            ch = chs[p]
+            if ch is not None:
+                if k == wr:
+                    _chan_store(ch, len(ch), al[e], wn[e], s, sw_l[p],
+                                req_bytes)
+                else:
+                    d += _chan_load_wait(ch, len(ch), al[e], wn[e], s,
+                                         rr_l[p], req_bytes)
+            done = s + d
+            lat[e] = done - tp
+            t[p] = u[p] = done
+        else:                       # async issue
+            p = ll[e]
+            j = tl[e]
+            tp = t[p]
+            if j >= 0:
+                dn = adone[p][j]
+                if dn > tp:
+                    lat[e] = dn - tp
+                    tp = dn
+                    t[p] = dn
+            up = u[p]
+            s = tp if tp > up else up
+            d = dl[e]
+            ch = chs[p]
+            if ch is not None:
+                if k == rda:
+                    d += _chan_load_wait(ch, len(ch), al[e], wn[e], s,
+                                         rr_l[p], req_bytes)
+                else:
+                    _chan_store(ch, len(ch), al[e], wn[e], s, sw_l[p],
+                                req_bytes)
+            done = s + d
+            u[p] = done
+            adone[p][ol[e]] = done
+    return np.asarray(lat, np.float64)

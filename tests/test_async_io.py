@@ -97,11 +97,37 @@ def test_topology_issue_routes_and_overlaps():
     assert topo.inflight_depth() == 0
 
 
-def test_closed_form_rejects_async_kinds():
-    tier = CxlTier(TierConfig(media="dram"))
-    tier.write_entry_async(0, ENTRY)
-    with pytest.raises(ValueError):
-        vector.page_trace_closed_form(tier.ops, "dram")
+def test_closed_form_accepts_async_kinds():
+    """The vectorized closed form now covers async kinds on DRAM-class
+    EPs (it rejected them before the issue-stall recurrence landed) —
+    pin exact agreement with the online accounting on a mixed trace."""
+    tier = CxlTier(TierConfig(media="dram", max_inflight=2))
+    for i in range(6):
+        tier.write_entry_async(i, ENTRY)      # cap 2: charges real waits
+    tier.advance(50_000.0)
+    for i in range(6):
+        tier.read_entry_async(i, ENTRY)
+    tier.read_entry(0, ENTRY)                 # blocking queues behind async
+    got = vector.page_trace_closed_form(
+        tier.ops, tier.cfg.media_name, ds=tier.cfg.ds_enabled,
+        req_bytes=tier.cfg.req_bytes, max_inflight=tier.cfg.max_inflight)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), got,
+                               rtol=1e-9, atol=1e-6)
+
+
+def test_closed_form_async_respects_inflight_cap():
+    """Pricing a cap-stalled async trace with a looser cap must diverge,
+    exactly like replay_page_trace does (the cap is part of the timing
+    contract, not a free parameter)."""
+    tier = CxlTier(TierConfig(media="dram", max_inflight=1))
+    tier.read_entry_async(0, ENTRY)
+    tier.read_entry_async(1, ENTRY)
+    assert any(ns > 0 for ns in tier.op_ns)
+    strict = vector.page_trace_closed_form(tier.ops, "dram", max_inflight=1)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), strict, rtol=1e-9)
+    loose = vector.page_trace_closed_form(tier.ops, "dram",
+                                          max_inflight=MAX_INFLIGHT_OPS)
+    assert not np.allclose(np.asarray(tier.op_ns), loose, rtol=0.01)
 
 
 # --------------------------------------------------------- tier handles
@@ -181,6 +207,52 @@ def test_random_async_interleaving_replays_within_1pct(seed, n_ports,
     got = np.asarray(tier.op_ns)
     np.testing.assert_allclose(got, oracle, rtol=0.01, atol=1e-6)
     assert got.sum() == pytest.approx(oracle.sum(), rel=0.01, abs=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 3),
+       st.integers(0, 2), st.sampled_from((1, 2, MAX_INFLIGHT_OPS)))
+def test_random_async_interleaving_closed_form_within_1pct(seed, n_ports,
+                                                           media_i, cap):
+    """The async-capable vectorized closed form must match the scalar
+    oracle within 1% per-op and in aggregate on random sync/async/
+    prefetch/advance interleavings across 1-3 ports x DRAM-class media
+    bins x max_inflight values (same generator as the replay property
+    above; DRAM-class bins because the closed form refuses media with
+    internal tasks)."""
+    rng = np.random.default_rng(seed)
+    bins = ("dram", "dram@2", "dram@4")
+    medias = tuple(bins[(media_i + j) % 3] for j in range(n_ports))
+    cfg = TierConfig(topology=medias, max_inflight=cap) if n_ports > 1 \
+        else TierConfig(media=medias[0], max_inflight=cap)
+    tier = CxlTier(cfg)
+    keys = list(range(6))
+    for _ in range(30):
+        k = keys[int(rng.integers(len(keys)))]
+        nbytes = int(rng.integers(1 << 10, 48 << 10))
+        op = rng.random()
+        if op < 0.25:
+            tier.write_entry(k, nbytes)
+        elif op < 0.45:
+            tier.write_entry_async(k, nbytes)
+        elif op < 0.60:
+            tier.read_entry(k, nbytes)
+        elif op < 0.80:
+            tier.read_entry_async(k, nbytes)
+        elif op < 0.90:
+            tier.speculative_read(k, nbytes)
+        else:
+            tier.advance(float(rng.integers(10_000, 500_000)))
+    oracle = _tier_replay(tier)
+    got = vector.page_trace_closed_form(
+        tier.ops,
+        tier.cfg.port_medias if tier.cfg.tagged else tier.cfg.media_name,
+        ds=tier.cfg.ds_enabled, req_bytes=tier.cfg.req_bytes,
+        max_inflight=tier.cfg.max_inflight)
+    np.testing.assert_allclose(got, oracle, rtol=0.01, atol=1e-6)
+    assert got.sum() == pytest.approx(oracle.sum(), rel=0.01, abs=1e-6)
+    np.testing.assert_allclose(np.asarray(tier.op_ns), got,
+                               rtol=0.01, atol=1e-6)
 
 
 def test_replay_with_wrong_cap_diverges_detectably():

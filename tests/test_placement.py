@@ -1,0 +1,311 @@
+"""Learned-placement tests: the GMM policy, tier heat aging, and
+cross-rank re-homing.
+
+Covers the ``repro.sim.policy.LearnedPlacement`` classifier in
+isolation (determinism, cold-start fallback, hot/cold separation on
+bimodal reuse), its integration as ``placement="learned"`` in
+``CxlTier`` (promotion + strict stall win over the ``hotness`` counter
+on churn traffic, with exact replay), the heat-aging knob (a cooled
+fast-port resident must eventually demote, under both policies), and
+the ``ShardedTier`` learned homing paths (re-home to the dominant
+requester rank, multi-source restores, fault consistency).
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.sharded_tier import ShardedTier
+from repro.core.tier import CxlTier, TierConfig
+from repro.sim.engine import replay_page_trace
+from repro.sim.policy import LearnedPlacement
+
+ENTRY = 32 << 10
+
+
+# --------------------------------------------------------------- policy
+
+def _feed_bimodal(pol, reps=60):
+    """Two key populations: hot keys restore every 1us, cold every 1ms."""
+    t = 0.0
+    for i in range(reps):
+        t += 1_000.0
+        pol.observe("hot-a", t, ENTRY)
+        pol.observe("hot-b", t + 250.0, ENTRY)
+        if i % 20 == 0:
+            pol.observe(f"cold-{i}", t, ENTRY)
+            pol.observe(f"cold-{i}", t + 1_000_000.0, ENTRY)
+    return t
+
+
+def test_policy_fits_and_separates_bimodal_reuse():
+    pol = LearnedPlacement()
+    t = _feed_bimodal(pol)
+    assert pol.fitted
+    assert pol.is_hot("hot-a", t)
+    assert not pol.is_hot("cold-40", t + 1_000_000.0)
+    assert pol.score("never-seen", t) == 0.0
+
+
+def test_policy_is_deterministic():
+    scores = []
+    for _ in range(2):
+        pol = LearnedPlacement()
+        t = _feed_bimodal(pol)
+        scores.append([pol.score(k, t) for k in ("hot-a", "hot-b",
+                                                 "cold-0", "cold-20")])
+    assert scores[0] == scores[1]
+
+
+def test_policy_cold_start_mirrors_counter_heuristic():
+    pol = LearnedPlacement(fallback_after=2)
+    pol.observe("k", 100.0, ENTRY)
+    assert not pol.is_hot("k", 200.0)       # one sighting: count 1 < 2
+    pol.observe("k", 300.0, ENTRY)
+    assert not pol.fitted
+    assert pol.is_hot("k", 400.0)           # counter fallback fires at 2
+
+
+def test_policy_scores_decay_with_simulated_time():
+    pol = LearnedPlacement()
+    t = _feed_bimodal(pol)
+    fresh = pol.score("hot-a", t)
+    stale = pol.score("hot-a", t + 100_000_000.0)
+    assert stale < fresh
+
+
+def test_policy_forget_drops_state():
+    pol = LearnedPlacement()
+    t = _feed_bimodal(pol)
+    pol.forget("hot-a")
+    assert pol.score("hot-a", t) == 0.0
+
+
+def test_policy_validates_window():
+    with pytest.raises(ValueError, match="window"):
+        LearnedPlacement(window=4, min_fit=16)
+
+
+# ------------------------------------------------------ learned CxlTier
+
+def _churn_trace(seed, n_keys=24, steps=600, phases=3, alpha=1.4):
+    rng = random.Random(seed)
+    trace, w = [], [1.0 / (r + 1) ** alpha for r in range(n_keys)]
+    for ph in range(phases):
+        shift = ph * (n_keys // phases)
+        ids = [(i + shift) % n_keys for i in range(n_keys)]
+        for _ in range(steps // phases):
+            k = ids[rng.choices(range(n_keys), weights=w)[0]]
+            trace.append(("read", f"k{k}"))
+            if rng.random() < 0.06:
+                trace.append(("write", f"k{k}"))
+    return trace
+
+
+def _run_churn(placement, trace, **cfg_kw):
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-fast", "ssd-slow"),
+                              placement=placement, **cfg_kw))
+    for k in sorted({k for _, k in trace}):
+        tier.write_entry(k, ENTRY)
+    stall = 0.0
+    for op, k in trace:
+        if op == "read":
+            stall += tier.read_entry(k, ENTRY)
+        else:
+            tier.write_entry(k, ENTRY)
+        tier.advance(2000.0)
+    return tier, stall
+
+
+def test_learned_beats_hotness_on_churn_with_exact_replay():
+    trace = _churn_trace(11)
+    hot_tier, hot_stall = _run_churn("hotness", trace)
+    lrn_tier, lrn_stall = _run_churn("learned", trace)
+    assert lrn_stall < hot_stall
+    assert lrn_tier.counters["promotions"] >= 1
+    for tier in (hot_tier, lrn_tier):
+        oracle = replay_page_trace(
+            tier.ops, media=tier.cfg.media_name,
+            topology=tier.cfg.port_medias, sr=tier.cfg.sr_enabled,
+            ds=tier.cfg.ds_enabled, req_bytes=tier.cfg.req_bytes,
+            dram_cache_bytes=tier.cfg.dram_cache_bytes,
+            max_inflight=tier.cfg.max_inflight)
+        np.testing.assert_allclose(np.asarray(tier.op_ns), oracle,
+                                   rtol=0.01, atol=1e-6)
+
+
+@pytest.mark.parametrize("placement", ("hotness", "learned"))
+def test_cooled_entry_eventually_demotes(placement):
+    """Heat aging: a once-hot entry must not pin the DRAM port forever —
+    once its decayed heat falls below one restore, the next placement
+    sweep demotes it even without budget pressure."""
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-slow"),
+                              placement=placement,
+                              heat_half_life_ns=1_000_000.0))
+    tier.write_entry("hot", ENTRY)
+    tier.write_entry("other", ENTRY)
+    for _ in range(4):                       # heat "hot" past promotion
+        tier.read_entry("hot", ENTRY)
+        tier.advance(2000.0)
+    assert "hot" in tier._fast_resident
+    tier.advance(50_000_000.0)               # 50 half-lives of silence
+    tier.read_entry("other", ENTRY)          # any restore runs the sweep
+    assert "hot" not in tier._fast_resident
+    assert tier.counters["demotions"] >= 1
+
+
+@pytest.mark.parametrize("placement", ("hotness", "learned"))
+def test_no_aging_by_default(placement):
+    """half_life=0 keeps the pre-aging behaviour: heat never decays and
+    a quiet fast-port resident stays put."""
+    tier = CxlTier(TierConfig(topology=("dram", "ssd-slow"),
+                              placement=placement))
+    tier.write_entry("hot", ENTRY)
+    tier.write_entry("other", ENTRY)
+    for _ in range(4):
+        tier.read_entry("hot", ENTRY)
+        tier.advance(2000.0)
+    assert "hot" in tier._fast_resident
+    tier.advance(50_000_000.0)
+    tier.read_entry("other", ENTRY)
+    assert "hot" in tier._fast_resident
+
+
+def test_serve_config_accepts_learned_placement():
+    from repro.serving.config import ServeConfig
+    sc = ServeConfig(tier_topology=("dram", "ssd-fast"),
+                     tier_placement="learned",
+                     tier_heat_half_life_ns=1e6)
+    tier = sc.make_tier()
+    assert tier.cfg.placement == "learned"
+    assert tier.cfg.heat_half_life_ns == 1e6
+    with pytest.raises(ValueError, match="tier_heat_half_life_ns"):
+        ServeConfig(tier_heat_half_life_ns=-1.0)
+
+
+# -------------------------------------------------- ShardedTier homing
+
+def _shared_tier(placement):
+    return ShardedTier(2, TierConfig(topology=("dram", "ssd-slow"),
+                                     placement=placement))
+
+
+def _train_hot(tier, key, req_rank, rounds=40):
+    """Drive enough tagged restores that the policy classifies ``key``
+    hot (interleaving a cold key so the EM split is non-degenerate)."""
+    tier.write_entry(key, ENTRY)
+    tier.write_entry("cold", ENTRY)
+    for i in range(rounds):
+        tier.read_entry(key, ENTRY, req_rank=req_rank)
+        if i % 10 == 0:
+            tier.read_entry("cold", ENTRY)
+            tier.advance(500_000.0)
+        tier.advance(2000.0)
+
+
+def test_sharded_rehomes_to_dominant_requester():
+    tier = _shared_tier("learned")
+    # pick a key hashed onto rank 0 so re-homing to rank 1 is observable
+    key = next(f"k{i}" for i in range(64) if tier.home_rank(f"k{i}") == 0)
+    _train_hot(tier, key, req_rank=1)
+    assert tier._policy.is_hot(key, tier.topo.now)
+    tier.write_entry(key, ENTRY)             # flush migrates the entry
+    assert tier._owner[key] == 1
+    assert tier.shard_counters["rehomes"] >= 1
+    assert tier.ranks[1].has_entry(key)
+    assert not tier.ranks[0].has_entry(key)  # stale copy freed
+
+
+def test_sharded_multi_source_reads_drop_peer_bytes():
+    tier = _shared_tier("learned")
+    key = "prefix"
+    _train_hot(tier, key, req_rank=1)
+    assert tier.shard_counters["multi_source_reads"] >= 1
+    # once mirrored on both of 2 ranks, a hot restore ships zero link
+    # bytes: every requester reads its shard from a local copy
+    before = tier.shard_counters["peer_bytes"]
+    stall = tier.read_entry(key, ENTRY, req_rank=0)
+    assert stall > 0.0
+    assert tier.shard_counters["peer_bytes"] == before
+    assert "multi_source_reads" in tier.snapshot()
+    assert "rehomes" in tier.snapshot()
+
+
+def test_sharded_hash_home_ignores_req_rank():
+    """The hash-home baseline must be bit-identical with and without
+    request tags — the placement bench replays one trace against both."""
+    stalls = []
+    for tag in (None, 1):
+        tier = _shared_tier("hashed")
+        tier.write_entry("k", ENTRY)
+        stalls.append([tier.read_entry("k", ENTRY, req_rank=tag)
+                       for _ in range(5)])
+    assert stalls[0] == stalls[1]
+
+
+def test_sharded_req_rank_validated():
+    tier = _shared_tier("learned")
+    tier.write_entry("k", ENTRY)
+    with pytest.raises(ValueError, match="req_rank"):
+        tier.read_entry("k", ENTRY, req_rank=7)
+
+
+def test_sharded_learned_survives_holder_loss():
+    """Dead ranks drop out of the multi-source holder set: after rank
+    1's ports hot-remove, reads of a formerly-mirrored hot entry still
+    succeed from rank 0 alone."""
+    from repro.sim.engine import FaultSchedule, hot_remove
+
+    cfg = TierConfig(topology=("dram", "ssd-slow"), placement="learned")
+    faults = FaultSchedule((hot_remove(10e9, 0), hot_remove(10e9, 1)))
+    tier = ShardedTier(2, cfg, faults=faults, fault_rank=1)
+    key = "prefix"
+    _train_hot(tier, key, req_rank=0)
+    assert tier.shard_counters["multi_source_reads"] >= 1
+    tier.advance(11e9)                       # fires both hot-removes
+    tier.poll_faults()
+    ns = tier.read_entry(key, ENTRY, req_rank=0)
+    assert not tier.last_entry_failed
+    assert ns > 0.0
+
+
+def test_sharded_learned_replay_parity():
+    tier = _shared_tier("learned")
+    rng = random.Random(3)
+    keys = [f"p{i}" for i in range(8)]
+    for k in keys:
+        tier.write_entry(k, ENTRY)
+    for _ in range(200):
+        k = rng.choice(keys)
+        tier.read_entry(k, ENTRY, req_rank=rng.randrange(2))
+        if rng.random() < 0.1:
+            tier.write_entry(k, ENTRY)
+        tier.advance(2000.0)
+    for t in tier.ranks:
+        oracle = replay_page_trace(
+            t.ops, media=t.cfg.media_name, topology=t.cfg.port_medias,
+            sr=t.cfg.sr_enabled, ds=t.cfg.ds_enabled,
+            req_bytes=t.cfg.req_bytes,
+            dram_cache_bytes=t.cfg.dram_cache_bytes,
+            max_inflight=t.cfg.max_inflight)
+        np.testing.assert_allclose(np.asarray(t.op_ns), oracle,
+                                   rtol=0.01, atol=1e-6)
+    for r in range(tier.n_ranks):
+        oracle = replay_page_trace(
+            tier.peer_ops[r], media=tier.peer_media, sr=False, ds=False,
+            req_bytes=tier.cfg.req_bytes,
+            dram_cache_bytes=tier.cfg.dram_cache_bytes,
+            max_inflight=tier.cfg.max_inflight)
+        np.testing.assert_allclose(np.asarray(tier.peer_op_ns[r]), oracle,
+                                   rtol=0.01, atol=1e-6)
+
+
+# ------------------------------------------------------- sweep section
+
+def test_sweep_page_trace_bench_gates():
+    from repro.sim import sweep as sw
+    pt = sw.page_trace_bench(n_ops=800)
+    assert pt["pass"]
+    assert any(s["async"] for s in pt["scenarios"].values())
+    for s in pt["scenarios"].values():
+        assert s["max_rel_err"] <= 0.01
